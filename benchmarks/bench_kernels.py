@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: Pallas(interpret) vs jnp-oracle correctness at
+benchmark shapes + oracle wall-time (CPU timings are for the jnp path —
+TPU timings come from the dry-run roofline, not this container).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+from repro.peft.lora import quantize
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    t0 = time.time()
+    rows = []
+    ks = jax.random.split(KEY, 8)
+
+    M, K, N, r = 512, 1024, 1024, 16
+    x = jax.random.normal(ks[0], (M, K), jnp.float32)
+    w = jax.random.normal(ks[1], (K, N), jnp.float32) * 0.02
+    a = jax.random.normal(ks[2], (K, r), jnp.float32) * 0.02
+    b = jax.random.normal(ks[3], (r, N), jnp.float32) * 0.02
+    err = float(jnp.abs(ops.lora_matmul(x, w, a, b, scale=2.0)
+                        - ref.lora_matmul(x, w, a, b, 2.0)).max())
+    us = _time(jax.jit(lambda *t: ref.lora_matmul(*t, 2.0)), x, w, a, b)
+    rows.append({"name": "lora_matmul", "value": f"{us:.0f}",
+                 "derived": f"max_err={err:.2e} shape={M}x{K}x{N}r{r}"})
+
+    packed, scales = quantize(w, 64)
+    err = float(jnp.abs(ops.int4_matmul(x, packed, scales)
+                        - ref.int4_matmul(x, packed, scales, 64)).max())
+    us = _time(jax.jit(lambda *t: ref.int4_matmul(*t, 64)),
+               x, packed, scales)
+    rows.append({"name": "int4_matmul", "value": f"{us:.0f}",
+                 "derived": f"max_err={err:.2e}"})
+
+    t = jax.nn.softmax(jax.random.normal(ks[4], (4096, 32)), -1)
+    z = jax.random.normal(ks[5], (4096, 32))
+    err = float(jnp.abs(ops.distill_kl(t, z) - ref.distill_kl(t, z)).max())
+    us = _time(jax.jit(ref.distill_kl), t, z)
+    rows.append({"name": "distill_kl", "value": f"{us:.0f}",
+                 "derived": f"max_err={err:.2e}"})
+
+    B, H, S, D = 1, 4, 512, 64
+    q = jax.random.normal(ks[6], (B, H, S, D), jnp.float32)
+    k2 = jax.random.normal(ks[7], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    err = float(jnp.abs(ops.flash_attention(q, k2, v)
+                        - ref.flash_attention(q, k2, v)).max())
+    us = _time(jax.jit(lambda *t: ref.flash_attention(*t)), q, k2, v)
+    rows.append({"name": "flash_attention", "value": f"{us:.0f}",
+                 "derived": f"max_err={err:.2e} S={S}"})
+    emit("kernels", rows, t0=t0)
+
+
+if __name__ == "__main__":
+    main()

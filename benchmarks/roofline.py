@@ -1,0 +1,74 @@
+"""Roofline report — reads the dry-run artifacts and prints the per-
+(arch × shape × mesh) three-term roofline table (EXPERIMENTS.md §Roofline).
+
+Run ``python -m repro.launch.dryrun --all`` first (separate process: it
+forces 512 host devices).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+DRY_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load(tag: str = "baseline"):
+    recs = []
+    for f in sorted(DRY_DIR.glob(f"*_{tag}.json")):
+        d = json.loads(f.read_text())
+        recs.append(d)
+    return recs
+
+
+def fmt_row(d):
+    r = d.get("roofline", {})
+    m = d.get("memory", {})
+    mf = d.get("model_flops", 0.0)
+    hw = d.get("cost", {}).get("flops_per_device", 0.0)
+    util = mf / (hw * 256) if hw else 0.0     # vs single-pod chips
+    return (f"{d['arch']:26s} {d['shape']:12s} {d['mesh']:6s} "
+            f"{d['status']:4s} "
+            f"c={r.get('compute_s', 0):9.2e} "
+            f"m={r.get('memory_s', 0):9.2e} "
+            f"x={r.get('collective_s', 0):9.2e} "
+            f"dom={r.get('dominant', '-'):10s} "
+            f"peak={m.get('peak_bytes_per_device', 0)/2**30:7.2f}GiB")
+
+
+HILLCLIMB = [
+    ("llama3-405b", "train_4k", ["faithful", "opt1", "opt2", "opt4",
+                                 "opt5"]),
+    ("kimi-k2-1t-a32b", "train_4k", ["faithful", "opt1", "opt2", "opt3",
+                                     "opt5", "opt7"]),
+    ("jamba-1.5-large-398b", "prefill_32k", ["faithful", "opt1", "opt2",
+                                             "opt3", "opt5"]),
+]
+
+
+def main():
+    t0 = time.time()
+    for tag in ("faithful", "optimized"):
+        recs = load(tag)
+        ok = sum(1 for r in recs if r["status"] == "ok")
+        print(f"# roofline table ({tag}): {ok}/{len(recs)} ok")
+        for d in recs:
+            print("roofline/" + fmt_row(d))
+        doms = {}
+        for d in recs:
+            if d["status"] == "ok":
+                doms[d["roofline"]["dominant"]] = \
+                    doms.get(d["roofline"]["dominant"], 0) + 1
+        print(f"roofline/_dominant_histogram[{tag}],{doms},")
+    print("# hillclimb ladders (§Perf)")
+    for arch, shape, tags in HILLCLIMB:
+        for tag in tags:
+            f = DRY_DIR / f"{arch}_{shape}_single_{tag}.json"
+            if f.exists():
+                print("perf/" + fmt_row(json.loads(f.read_text())
+                                        ) + f" tag={tag}")
+    print(f"roofline/_wall_s,{time.time()-t0:.1f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Quickstart: LLM-QFL in ~20 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Builds the genomic federated task (3 quantum devices), fine-tunes each
+device's LLM once, then runs 4 regulated federated rounds and prints the
+controller's decisions.
+"""
+from repro.core import run_experiment
+from repro.data.tasks import build_task
+
+task = build_task("genomic", n_clients=3, train_size=150,
+                  test_size=60, val_size=40, seed=0)
+
+result = run_experiment(
+    task,
+    method="llm-qfl",       # "qfl" = the paper's FedAvg baseline
+    n_rounds=4,
+    maxiter0=8,             # COBYLA-style per-round iteration budget
+    llm_steps=20,           # round-1 LoRA fine-tuning steps
+    select_frac=1.0,        # aggregate all devices (try 0.34)
+)
+
+print(f"LLM reference losses: {[round(l, 3) for l in result.llm_losses]}")
+for r in result.rounds:
+    print(f"round {r.t}: maxiters={r.maxiters} "
+          f"server_loss={r.server_loss:.4f} "
+          f"test_acc={r.server_test_acc:.3f}")
+print("early stop:", result.terminated_early)

@@ -1,0 +1,185 @@
+"""Model / run configuration system.
+
+Every assigned architecture gets a module in this package exporting
+``CONFIG: ModelConfig`` built from the exact numbers in the assignment
+table (source cited in the module docstring).  ``registry.get(name)``
+resolves ids; ``reduced(cfg)`` derives the CPU smoke-test variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+# A model is a repeating *pattern* of (mixer, ffn) pairs scanned n_groups
+# times:  n_layers == len(pattern) * n_groups.
+#   mixer ∈ {"attn", "mla", "mamba", "mlstm", "slstm"}
+#   ffn   ∈ {"mlp", "moe", "none"}
+LayerSpec = Tuple[str, str]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden dim
+    n_shared_experts: int = 0      # DeepSeek/Kimi-style always-on experts
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    balance_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3)."""
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None  # default ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    expand: int = 2                # mLSTM inner expansion
+    slstm_ffn_factor: float = 4 / 3
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 16
+    alpha: float = 32.0
+    dropout: float = 0.05
+    # which weight families receive adapters
+    targets: Tuple[str, ...] = ("wq", "wkv", "wo", "w_in", "w_out")
+    quantize_base: bool = False    # QLoRA: int4 base weights
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                 # dense|moe|ssm|hybrid|vlm|audio
+    source: str                    # citation from assignment table
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    pattern: Tuple[LayerSpec, ...] = (("attn", "mlp"),)
+    # attention
+    rope_theta: float = 500000.0
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl sectioned rotary
+    sliding_window: int = 0                # 0 = full attention
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    lora: LoRAConfig = field(default_factory=LoRAConfig)
+    # enc-dec (whisper)
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    n_frontend_tokens: int = 0     # frames/patches emitted by the stub frontend
+    frontend: str = ""             # ""|"audio"|"vision"
+    # numerics
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # long-context policy
+    supports_long_decode: bool = False     # sub-quadratic decode path exists
+    long_decode_window: int = 8192         # SWA window used for long_500k
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        assert self.n_layers % len(self.pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern period {len(self.pattern)}")
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), for 6ND roofline."""
+        from repro.models.counting import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.counting import count_active_params
+        return count_active_params(self)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assignment table)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def reduced(cfg: ModelConfig, *, d_model: int = 256, n_groups: int = 1,
+            vocab: int = 512) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests (≤2 layers eff.,
+    d_model ≤ 512, ≤4 experts)."""
+    period = len(cfg.pattern)
+    n_heads = max(2, min(4, cfg.n_heads))
+    n_kv = 1 if cfg.n_kv_heads < cfg.n_heads else n_heads
+    kw = dict(
+        name=cfg.name + "-smoke",
+        n_layers=period * n_groups,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=d_model // n_heads,
+        d_ff=d_model * 2 if cfg.d_ff else 0,
+        vocab_size=vocab,
+        n_encoder_layers=(period * n_groups) if cfg.encoder_decoder else 0,
+        n_frontend_tokens=16 if cfg.frontend else 0,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        long_decode_window=64,
+    )
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2),
+            d_ff=d_model * 2,
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1))
+    if cfg.mla:
+        kw["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                              qk_nope_head_dim=32, qk_rope_head_dim=16,
+                              v_head_dim=32)
+    if cfg.lora:
+        kw["lora"] = dataclasses.replace(cfg.lora, rank=4)
+    if cfg.mrope_sections:
+        # rescale sections proportionally to the reduced head_dim
+        half = (d_model // n_heads) // 2
+        tot = sum(cfg.mrope_sections)
+        secs = [max(1, s * half // tot) for s in cfg.mrope_sections]
+        secs[-1] += half - sum(secs)
+        kw["mrope_sections"] = tuple(secs)
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,65 @@
+"""Architecture registry: ``get(name)`` resolves --arch ids."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES, reduced
+from repro.configs import paper_models
+
+_ASSIGNED = {
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "qwen2-vl-72b":              "repro.configs.qwen2_vl_72b",
+    "whisper-large-v3":          "repro.configs.whisper_large_v3",
+    "xlstm-125m":                "repro.configs.xlstm_125m",
+    "minicpm3-4b":               "repro.configs.minicpm3_4b",
+    "kimi-k2-1t-a32b":           "repro.configs.kimi_k2_1t_a32b",
+    "starcoder2-7b":             "repro.configs.starcoder2_7b",
+    "llama3-405b":               "repro.configs.llama3_405b",
+    "stablelm-3b":               "repro.configs.stablelm_3b",
+    "jamba-1.5-large-398b":      "repro.configs.jamba_1_5_large_398b",
+}
+
+_PAPER = {
+    "llama3.2-1b": paper_models.LLAMA32_1B,
+    "gpt2": paper_models.GPT2,
+    "deepseek-llm-7b-base": paper_models.DEEPSEEK_7B,
+    "tiny-llm": paper_models.TINY_LLM,
+}
+
+
+def assigned_names() -> List[str]:
+    return list(_ASSIGNED)
+
+
+def all_names() -> List[str]:
+    return list(_ASSIGNED) + list(_PAPER)
+
+
+def get(name: str) -> ModelConfig:
+    if name in _ASSIGNED:
+        return importlib.import_module(_ASSIGNED[name]).CONFIG
+    if name in _PAPER:
+        return _PAPER[name]
+    if name.endswith("-smoke"):
+        return reduced(get(name[: -len("-smoke")]))
+    raise KeyError(f"unknown arch {name!r}; known: {all_names()}")
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+def pairs(include_skipped: bool = False):
+    """All (arch, shape) dry-run pairs; long_500k skipped only for
+    full-attention enc-dec (whisper) per DESIGN.md."""
+    out = []
+    for a in assigned_names():
+        cfg = get(a)
+        for s in INPUT_SHAPES:
+            if s == "long_500k" and not cfg.supports_long_decode:
+                if include_skipped:
+                    out.append((a, s, "SKIP"))
+                continue
+            out.append((a, s, "RUN") if include_skipped else (a, s))
+    return out

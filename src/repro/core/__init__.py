@@ -1,0 +1,12 @@
+"""LLM-QFL core — the paper's contribution (Alg. 1 + Sec. III).
+
+Public API:
+    RunConfig, Orchestrator, run_experiment   — the federated loop
+    regulation.regulate                        — optimizer regulation law
+    selection.select_aligned                   — alignment client selection
+    termination.TerminationCriterion           — early stopping
+    distill.kl_divergence / make_client_objective
+    llm_client.LLMClient                       — per-client LLM fine-tuning
+"""
+from repro.core import distill, llm_client, regulation, selection, termination  # noqa: F401
+from repro.core.orchestrator import Orchestrator, RunConfig, RunResult, run_experiment  # noqa: F401

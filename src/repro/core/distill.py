@@ -1,0 +1,48 @@
+"""Knowledge distillation term K(θ_g, θ_i) (Eq. 5–6, DESIGN.md §6.1).
+
+The fine-tuned local LLM produces per-example soft class distributions on
+the client's shard (teacher).  The client objective adds
+λ·KL(teacher ‖ student) + µ·‖θ − θ_g‖², so the gradient-free optimizer
+minimizes  F_i(θ) + λ·K + µ·prox  — local adaptation + global coherence +
+smooth convergence, exactly the three forces of Eq. (6).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kl_divergence(p_teacher: jnp.ndarray, p_student: jnp.ndarray,
+                  eps: float = 1e-9) -> jnp.ndarray:
+    """Mean KL(p_t ‖ p_s) over the batch; both (B, C) prob simplexes."""
+    pt = jnp.clip(p_teacher, eps, 1.0)
+    ps = jnp.clip(p_student, eps, 1.0)
+    return jnp.mean(jnp.sum(pt * (jnp.log(pt) - jnp.log(ps)), axis=-1))
+
+
+def make_client_objective(qnn_loss_fn: Callable, qnn_forward: Callable,
+                          qX: jnp.ndarray,
+                          teacher_probs: Optional[jnp.ndarray],
+                          theta_g: Optional[np.ndarray], *,
+                          lam: float = 0.1, mu: float = 0.01) -> Callable:
+    """theta (np) → float:  F_i + λ·KL(teacher‖student) + µ·‖θ−θ_g‖²/d."""
+    tg = None if theta_g is None else jnp.asarray(theta_g, jnp.float32)
+
+    @jax.jit
+    def _penalties(theta):
+        out = jnp.zeros((), jnp.float32)
+        if teacher_probs is not None and lam > 0:
+            probs = qnn_forward(theta, qX)
+            out = out + lam * kl_divergence(teacher_probs, probs)
+        if tg is not None and mu > 0:
+            out = out + mu * jnp.mean((theta - tg) ** 2)
+        return out
+
+    def objective(theta_np) -> float:
+        theta = jnp.asarray(theta_np, jnp.float32)
+        return float(qnn_loss_fn(theta)) + float(_penalties(theta))
+
+    return objective

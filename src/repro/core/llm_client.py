@@ -1,0 +1,138 @@
+"""Per-client LLM fine-tuning (Alg. 1 Step 1) on the repro.models substrate.
+
+Every client shares a frozen randomly-initialized base LLM (the "pretrained"
+model; DESIGN.md §2 — no offline checkpoints) and fine-tunes **LoRA
+adapters** on its private shard during round 1 only.  The fine-tuned LLM
+then provides:
+  - ``eval_loss``     : the reference loss L_LLM^t for optimizer regulation,
+  - ``teacher_probs`` : per-example soft class labels for KL distillation,
+  - ``f1``            : macro-F1 (paper Fig. 24 benchmark axis).
+
+"Distill LLM using a global model" (Alg. 1 line 8) is realized as adapter
+blending toward the weighted FedAvg adapter: a_i ← (1−ρ)·a_i + ρ·a_g.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper_models
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def task_llm_config(base_name: str, vocab_size: int, seq_len: int):
+    """Clone a paper LLM config with the task vocabulary.
+
+    ``tiny-llm`` is the CPU-scale default; pass 'llama3.2-1b' etc. for the
+    full paper configs (dry-run scale).
+    """
+    base = {
+        "tiny-llm": paper_models.TINY_LLM,
+        "llama3.2-1b": paper_models.LLAMA32_1B,
+        "gpt2": paper_models.GPT2,
+        "deepseek-llm-7b-base": paper_models.DEEPSEEK_7B,
+    }[base_name]
+    return dataclasses.replace(base, vocab_size=vocab_size)
+
+
+class LLMClient:
+    """One client's local LLM: shared frozen base + private LoRA adapters."""
+
+    def __init__(self, cfg, base_params, key, *, n_labels: int,
+                 lr: float = 3e-3, batch_size: int = 16):
+        self.cfg = cfg
+        self.base = base_params
+        self.n_labels = n_labels
+        self.lr = lr
+        self.batch_size = batch_size
+        self.adapters = M.init_adapters(cfg, key, base_params)
+        self.opt_state = adamw.init(self.adapters)
+        self._step = jax.jit(M.make_train_step(
+            cfg, n_microbatches=1, lr=lr,
+            opts=M.FwdOptions(remat=False)))
+        self._key = key
+
+    # -- fine-tuning (round 1 / periodic refresh) ---------------------------
+    def fine_tune(self, batch: Dict[str, np.ndarray], *, steps: int = 30
+                  ) -> float:
+        toks = jnp.asarray(batch["tokens"])
+        ys = jnp.asarray(batch["labels"])
+        n = toks.shape[0]
+        bs = min(self.batch_size, n)
+        last = float("nan")
+        for s in range(steps):
+            self._key, k = jax.random.split(self._key)
+            idx = jax.random.choice(k, n, (bs,), replace=n < bs)
+            mb = {"tokens": toks[idx], "labels": ys[idx]}
+            self.adapters, self.opt_state, metrics = self._step(
+                self.base, self.adapters, self.opt_state, mb)
+            last = float(metrics["loss"])
+        return last
+
+    # -- evaluation ----------------------------------------------------------
+    def _label_logits(self, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Logits over the label-token block at each example's label
+        position.  Returns (logits (B, n_labels), gold (B,))."""
+        toks = jnp.asarray(batch["tokens"])
+        ys = jnp.asarray(batch["labels"])
+        hidden, _, _ = M.forward(self.cfg, self.base, self.adapters,
+                                 {"tokens": toks},
+                                 M.FwdOptions(remat=False))
+        pos = jnp.argmax((ys >= 0).astype(jnp.int32), axis=1)       # (B,)
+        h = jnp.take_along_axis(hidden, pos[:, None, None], axis=1)[:, 0]
+        head = (self.base["embed"].T if self.cfg.tie_embeddings
+                else self.base["lm_head"])
+        label_head = head[:, -self.n_labels:].astype(jnp.float32)
+        logits = h.astype(jnp.float32) @ label_head
+        gold_tok = jnp.take_along_axis(ys, pos[:, None], axis=1)[:, 0]
+        gold = gold_tok - (self.cfg.vocab_size - self.n_labels)
+        return logits, gold
+
+    def eval_loss(self, batch) -> float:
+        """Classification NLL on the label positions — L_LLM^t."""
+        logits, gold = self._label_logits(batch)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, gold[:, None], axis=1).mean()
+        return float(nll)
+
+    def teacher_probs(self, batch) -> jnp.ndarray:
+        """Soft class labels (B, n_labels) for distillation."""
+        logits, _ = self._label_logits(batch)
+        return jax.nn.softmax(logits, axis=-1)
+
+    def f1(self, batch) -> float:
+        logits, gold = self._label_logits(batch)
+        pred = np.asarray(jnp.argmax(logits, axis=-1))
+        gold = np.asarray(gold)
+        f1s = []
+        for c in range(self.n_labels):
+            tp = float(((pred == c) & (gold == c)).sum())
+            fp = float(((pred == c) & (gold != c)).sum())
+            fn = float(((pred != c) & (gold == c)).sum())
+            p = tp / (tp + fp) if tp + fp else 0.0
+            r = tp / (tp + fn) if tp + fn else 0.0
+            f1s.append(2 * p * r / (p + r) if p + r else 0.0)
+        return float(np.mean(f1s))
+
+
+def fedavg_adapters(adapter_list, weights) -> Dict:
+    """Weighted average of client adapter pytrees (global LLM teacher)."""
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    out = jax.tree.map(lambda *xs: sum(wi * x for wi, x in zip(w, xs)),
+                       *adapter_list)
+    return out
+
+
+def distill_to_global(clients, weights, *, rho: float = 0.25):
+    """a_i ← (1−ρ)·a_i + ρ·a_g  (Alg. 1 line 8)."""
+    a_g = fedavg_adapters([c.adapters for c in clients], weights)
+    for c in clients:
+        c.adapters = jax.tree.map(
+            lambda a, g: (1 - rho) * a + rho * g, c.adapters, a_g)
+    return a_g

@@ -1,0 +1,239 @@
+"""Algorithm 1 — the LLM-QFL federated orchestrator.
+
+Plain ``QFL`` (the paper's FedAvg baseline) and ``LLM-QFL`` (regulated
+optimizer + alignment selection + early termination + distillation) share
+this loop; a ``RunConfig`` selects the variant:
+
+  - method="qfl"                      : fixed maxiter, aggregate all.
+  - method="llm-qfl", select_frac=1.0 : LLM-QFL-all.
+  - method="llm-qfl", select_frac=0.1 : LLM-QFL-selected.
+
+Per round (T total):  broadcast θ_g → [regulate maxiter → local grad-free
+training on F_i + λ·KL + µ·prox] per device → alignment selection →
+weighted aggregation → server eval → termination check.  Communication
+time is accounted through the quantum backend's latency model (Table I).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distill, regulation, selection
+from repro.core.llm_client import LLMClient, distill_to_global, task_llm_config
+from repro.core.termination import TerminationCriterion
+from repro.data.tasks import FederatedTask
+from repro.optim.gradfree import GradFreeOptimizer
+from repro.quantum import backends as backend_mod
+from repro.quantum import qnn
+
+
+@dataclass
+class RunConfig:
+    method: str = "llm-qfl"            # "qfl" | "llm-qfl"
+    select_frac: float = 1.0           # 1.0 = all; 0.1 = top-10% aligned
+    regulation: str = "adaptive"       # App. F variant
+    maxiter0: int = 10
+    maxiter_cap: int = 100
+    n_rounds: int = 10
+    epsilon: float = 1e-3
+    lam: float = 0.1                   # λ distillation weight (Eq. 6)
+    mu: float = 0.01                   # µ prox weight (Eq. 6)
+    optimizer: str = "nelder-mead"     # | "spsa"
+    backend: str = "exact"
+    llm_name: str = "tiny-llm"
+    llm_steps: int = 30
+    llm_lr: float = 3e-3
+    distill_rho: float = 0.25
+    qnn_kind: str = ""                 # "" → vqc for 2-class, qcnn for 3
+    early_stop: bool = True
+    seed: int = 0
+
+    @property
+    def uses_llm(self) -> bool:
+        return self.method == "llm-qfl"
+
+
+@dataclass
+class RoundRecord:
+    t: int
+    maxiters: List[int]
+    ratios: List[float]
+    client_losses: List[float]
+    selected: List[int]
+    server_loss: float
+    server_val_acc: float
+    server_test_acc: float
+    comm_time_s: float
+    cum_evals: List[int]
+    var_all: float = 0.0
+    var_selected: float = 0.0
+
+
+@dataclass
+class RunResult:
+    config: RunConfig
+    rounds: List[RoundRecord] = field(default_factory=list)
+    llm_losses: List[float] = field(default_factory=list)
+    llm_f1: List[float] = field(default_factory=list)
+    llm_finetune_time_s: float = 0.0
+    theta_g: Optional[np.ndarray] = None
+    terminated_early: bool = False
+
+    def series(self, attr: str):
+        return [getattr(r, attr) for r in self.rounds]
+
+
+class Orchestrator:
+    def __init__(self, task: FederatedTask, rc: RunConfig):
+        self.task = task
+        self.rc = rc
+        kind = rc.qnn_kind or ("vqc" if task.n_classes == 2 else "qcnn")
+        self.spec = qnn.QNNSpec(kind, n_qubits=4, n_classes=task.n_classes)
+        self.backend = backend_mod.get(rc.backend)
+        self.fwd = qnn.make_forward(self.spec)
+        self._key = jax.random.PRNGKey(rc.seed)
+
+    # -- helpers -------------------------------------------------------------
+    def _nll(self, theta: np.ndarray, X, y) -> float:
+        probs = self.fwd(jnp.asarray(theta, jnp.float32), jnp.asarray(X))
+        probs = self.backend.transform_probs(probs)
+        return float(qnn.nll_loss(probs, jnp.asarray(y)))
+
+    def _acc(self, theta: np.ndarray, X, y) -> float:
+        probs = self.fwd(jnp.asarray(theta, jnp.float32), jnp.asarray(X))
+        return float(qnn.accuracy(probs, jnp.asarray(y)))
+
+    def _client_loss_fn(self, i: int):
+        c = self.task.clients[i]
+        X, y = jnp.asarray(c.qX), jnp.asarray(c.qy)
+        base = qnn.make_loss_fn(self.spec, X, y, backend=self.backend)
+        if not self.rc.uses_llm:
+            return lambda th: float(base(jnp.asarray(th, jnp.float32)))
+        teacher = self._teacher_probs[i]
+        return distill.make_client_objective(
+            base, self.fwd, X, teacher, self._theta_g,
+            lam=self.rc.lam, mu=self.rc.mu)
+
+    # -- Step 1: LLM fine-tuning (round 1 only) -------------------------------
+    def _llm_round(self):
+        rc, task = self.rc, self.task
+        t0 = time.time()
+        cfg = task_llm_config(rc.llm_name, task.vocab_size, task.llm_seq_len)
+        from repro.models import model as M
+        self._key, k0 = jax.random.split(self._key)
+        base = M.init_params(cfg, k0, dtype=jnp.float32)
+        self.llm_clients = []
+        for i in range(task.n_clients):
+            self._key, k = jax.random.split(self._key)
+            cl = LLMClient(cfg, base, k, n_labels=task.n_classes,
+                           lr=rc.llm_lr)
+            cl.fine_tune(task.clients[i].llm_batch, steps=rc.llm_steps)
+            self.llm_clients.append(cl)
+        distill_to_global(self.llm_clients, task.weights,
+                          rho=rc.distill_rho)
+        self._llm_losses = [cl.eval_loss(task.clients[i].llm_batch)
+                            for i, cl in enumerate(self.llm_clients)]
+        self._llm_f1 = [cl.f1(task.clients[i].llm_batch)
+                        for i, cl in enumerate(self.llm_clients)]
+        self._teacher_probs = [
+            cl.teacher_probs(task.clients[i].llm_batch)
+            for i, cl in enumerate(self.llm_clients)]
+        return time.time() - t0
+
+    # -- main loop -------------------------------------------------------------
+    def run(self) -> RunResult:
+        rc, task = self.rc, self.task
+        res = RunResult(config=rc)
+
+        self._key, k = jax.random.split(self._key)
+        self._theta_g = np.asarray(self.spec.init_params(k), np.float64)
+
+        if rc.uses_llm:
+            res.llm_finetune_time_s = self._llm_round()
+            res.llm_losses = list(self._llm_losses)
+            res.llm_f1 = list(self._llm_f1)
+        else:
+            self._teacher_probs = [None] * task.n_clients
+
+        maxiters = [rc.maxiter0] * task.n_clients
+        last_losses = [float("inf")] * task.n_clients
+        cum_evals = [0] * task.n_clients
+        term = TerminationCriterion(epsilon=rc.epsilon,
+                                    t_max=rc.n_rounds)
+
+        for t in range(1, rc.n_rounds + 1):
+            ratios = [1.0] * task.n_clients
+            # Step 2: regulation (Alg. 1 lines 11–17; only after round 1)
+            if rc.uses_llm and t > 1:
+                for i in range(task.n_clients):
+                    llm_l = self._llm_losses[i]
+                    if np.isfinite(last_losses[i]) and llm_l > 0:
+                        ratios[i] = last_losses[i] / llm_l
+                    maxiters[i] = regulation.regulate(
+                        maxiters[i], last_losses[i], llm_l,
+                        variant=rc.regulation, cap=rc.maxiter_cap)
+
+            # local training (parallel devices; sequential emulation)
+            thetas, losses, comm_t = [], [], 0.0
+            for i in range(task.n_clients):
+                fn = self._client_loss_fn(i)
+                opt = GradFreeOptimizer(fn, self._theta_g,
+                                        method=rc.optimizer,
+                                        seed=rc.seed * 997 + i)
+                n0 = opt.n_evals
+                th, f = opt.run(maxiters[i])
+                thetas.append(np.asarray(th, np.float64))
+                # report pure F_i (no penalty) as the device loss
+                losses.append(self._nll(th, task.clients[i].qX,
+                                        task.clients[i].qy))
+                cum_evals[i] += opt.n_evals
+                comm_t = max(comm_t, self.backend.eval_time(
+                    task.clients[i].n) * (opt.n_evals - n0))
+            last_losses = list(losses)
+
+            # server loss of the current global model (pre-aggregation)
+            server_loss_pre = self._nll(self._theta_g, task.val_qX,
+                                        task.val_qy)
+
+            # client selection (Sec. III-B)
+            if rc.uses_llm and rc.select_frac < 1.0:
+                sel = selection.select_aligned(losses, server_loss_pre,
+                                               rc.select_frac)
+            else:
+                sel = list(range(task.n_clients))
+            var = selection.selection_variance(losses, server_loss_pre, sel)
+
+            # aggregation (Eq. 3) over the selected set
+            w = np.asarray([task.weights[i] for i in sel])
+            w = w / w.sum()
+            self._theta_g = sum(
+                wi * thetas[i] for wi, i in zip(w, sel))
+
+            server_loss = self._nll(self._theta_g, task.val_qX, task.val_qy)
+            rec = RoundRecord(
+                t=t, maxiters=list(maxiters), ratios=ratios,
+                client_losses=losses, selected=sel,
+                server_loss=server_loss,
+                server_val_acc=self._acc(self._theta_g, task.val_qX,
+                                         task.val_qy),
+                server_test_acc=self._acc(self._theta_g, task.test_qX,
+                                          task.test_qy),
+                comm_time_s=comm_t, cum_evals=list(cum_evals),
+                var_all=var["var_all"], var_selected=var["var_selected"])
+            res.rounds.append(rec)
+
+            if term.update(server_loss, t) and rc.early_stop:
+                res.terminated_early = t < rc.n_rounds
+                break
+
+        res.theta_g = self._theta_g
+        return res
+
+
+def run_experiment(task: FederatedTask, **overrides) -> RunResult:
+    return Orchestrator(task, RunConfig(**overrides)).run()

@@ -1,0 +1,33 @@
+"""Alignment-based client selection (Sec. III-B).
+
+d_i^t = |L_i^t − L_s^t|; keep the devices with the smallest k% distances.
+Reduces aggregation variance by (1 − k/N) (Cor. VI.8.2).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def distances(client_losses: Sequence[float], server_loss: float
+              ) -> np.ndarray:
+    return np.abs(np.asarray(client_losses, np.float64) - server_loss)
+
+
+def select_aligned(client_losses: Sequence[float], server_loss: float,
+                   frac: float) -> List[int]:
+    """Indices of the top-k% most aligned clients (ties → lower index).
+    Always returns at least one client."""
+    d = distances(client_losses, server_loss)
+    k = max(1, int(round(frac * len(d))))
+    return sorted(np.argsort(d, kind="stable")[:k].tolist())
+
+
+def selection_variance(client_losses: Sequence[float], server_loss: float,
+                       selected: Sequence[int]) -> dict:
+    """Empirical check of Cor. VI.8.2: Var over selected ≤ Var over all."""
+    d = distances(client_losses, server_loss)
+    d2 = d ** 2
+    return {"var_all": float(d2.mean()),
+            "var_selected": float(d2[list(selected)].mean())}

@@ -1,0 +1,1 @@
+from repro.data import federated, genomic, pca, tasks, tokenizer, tweets  # noqa: F401

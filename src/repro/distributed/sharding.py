@@ -1,0 +1,259 @@
+"""GSPMD sharding rules: FSDP along 'data', tensor-parallel along 'model',
+pure data-parallel along 'pod' (DCN).  Rules are keyed by parameter leaf
+name (we own every name; see models/*).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = "data"
+TP = "model"
+
+# leaf name -> (in_axis, out_axis) for 2D weights (stacked group dim prepended
+# automatically).  None = replicated on that dim.
+_DENSE_RULES = {
+    "wq": (FSDP, TP), "wkv": (FSDP, TP), "xwq": (FSDP, TP), "xwkv": (FSDP, TP),
+    "wo": (TP, FSDP), "xwo": (TP, FSDP),
+    "w_in": (FSDP, TP), "w_out": (TP, FSDP),
+    "shared_w_in": (FSDP, TP), "shared_w_out": (TP, FSDP),
+    "up_proj": (FSDP, TP), "down_proj": (TP, FSDP),
+    "in_proj": (FSDP, TP), "out_proj": (TP, FSDP),
+    "w_gates": (FSDP, TP),
+    "wq_a": (FSDP, None), "wq_b": (None, TP),
+    "wkv_a": (FSDP, None), "wkv_b": (None, TP),
+    "router": (FSDP, None),
+    "x_proj": (TP, None), "dt_w": (None, TP),
+    "wk": (FSDP, TP), "wv": (FSDP, TP),
+    "w_if": (TP, None),
+    "embed": (TP, FSDP),          # vocab on model, d on data
+    "lm_head": (FSDP, TP),        # d on data, vocab on model
+    "proj_frontend": (FSDP, TP),
+}
+
+# 3D expert weights: (E, in, out)
+_MOE_RULES = {"w_in": (TP, FSDP, None), "w_out": (TP, None, FSDP)}
+
+_SPECIAL = {
+    "conv_w": (None, TP),
+    "A_log": (TP, None),
+    "r_gates": (None, None, None),
+}
+
+
+def _leaf_spec(name: str, shape: Tuple[int, ...], stacked: bool) -> P:
+    nd = len(shape) - (1 if stacked else 0)
+    base: Tuple
+    if name.endswith("__q"):
+        # QLoRA packed int4: same layout as the base weight (out dim
+        # halved — divisibility fitting handles the rest)
+        in_ax, out_ax = _DENSE_RULES.get(name[:-3], (None, None))
+        base = (in_ax, out_ax)
+    elif name.endswith("__s"):
+        # blockwise scales: shard the in dim like the weight
+        in_ax, _ = _DENSE_RULES.get(name[:-3], (None, None))
+        base = (in_ax, None)
+    elif name.endswith("_lora_a"):
+        tgt = name[: -len("_lora_a")]
+        in_ax = _DENSE_RULES.get(tgt, (None, None))[0]
+        base = (in_ax, None)
+    elif name.endswith("_lora_b"):
+        tgt = name[: -len("_lora_b")]
+        out_ax = _DENSE_RULES.get(tgt, (None, None))[1]
+        base = (None, out_ax)
+    elif name in _SPECIAL and nd == len(_SPECIAL[name]):
+        base = _SPECIAL[name]
+    elif nd == 3 and name in _MOE_RULES:
+        base = _MOE_RULES[name]
+    elif nd == 2 and name in _DENSE_RULES:
+        base = _DENSE_RULES[name]
+    else:
+        base = (None,) * nd       # norms, biases, scalars: replicated
+    if stacked:
+        base = (None,) + tuple(base)
+    return P(*base)
+
+
+def _filter_axes(spec: P, axis_names) -> P:
+    """Drop mesh axes that do not exist on the current mesh."""
+    def ok(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in axis_names)
+            return kept if kept else None
+        return e if e in axis_names else None
+    return P(*(ok(e) for e in spec))
+
+
+def _fit_divisibility(spec: P, shape, axis_sizes) -> P:
+    """Drop sharding on dims the mesh axes do not divide evenly (e.g. a
+    51866-entry vocab over a 16-way 'model' axis).  Axes are dropped from
+    the right of a tuple entry until the product divides the dim."""
+    if not axis_sizes:
+        return spec
+    out = []
+    for i, e in enumerate(spec):
+        if e is None:
+            out.append(None)
+            continue
+        axes = list(e) if isinstance(e, (tuple, list)) else [e]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= axis_sizes.get(a, 1)
+            if shape[i] % prod == 0:
+                break
+            axes.pop()
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def param_specs(params, axis_names=("data", "model"), axis_sizes=None):
+    """PartitionSpec tree matching a params pytree.
+
+    Group-stacked subtrees live under keys 'groups' / 'enc_groups'
+    (tuples of dicts of (G, ...) arrays); everything else is unstacked.
+    ``axis_sizes`` (mesh.shape mapping) enables divisibility fitting.
+    """
+    def one(name, shape, stacked):
+        s = _filter_axes(_leaf_spec(name, shape, stacked), axis_names)
+        return _fit_divisibility(s, shape, axis_sizes)
+
+    def walk(tree, stacked):
+        if isinstance(tree, dict):
+            return {k: (walk(v, stacked) if isinstance(v, (dict, tuple, list))
+                        else one(k, v.shape, stacked))
+                    for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v, stacked) for v in tree)
+        raise TypeError(type(tree))
+
+    out = {}
+    for k, v in params.items():
+        if k in ("groups", "enc_groups"):
+            out[k] = walk(v, True)
+        elif isinstance(v, (dict, tuple, list)):
+            out[k] = walk(v, False)
+        else:
+            out[k] = one(k, v.shape, False)
+    return out
+
+
+def batch_axes(axis_names) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in axis_names)
+
+
+def batch_specs(batch, axis_names, *, batch_sharded=True):
+    """Spec tree for an input batch: leading dim over ('pod','data')."""
+    ba = batch_axes(axis_names) if batch_sharded else ()
+
+    def leaf(x):
+        if x.ndim == 0:
+            return P()
+        if x.shape[0] == 1 or not ba:
+            return P(*((None,) * x.ndim))
+        return P(ba, *((None,) * (x.ndim - 1)))
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_specs(cache, axis_names, batch: int, axis_sizes=None):
+    """Decode caches: batch over ('pod','data') when divisible, long axes
+    (seq) over 'model' where present.  Divisibility-checked when
+    ``axis_sizes`` (mesh.shape mapping) is given."""
+    ba = batch_axes(axis_names)
+    tp = TP if TP in axis_names else None
+
+    def divides(axes, dim):
+        if not axis_sizes:
+            return True
+        prod = 1
+        for a in (axes if isinstance(axes, (tuple, list)) else [axes]):
+            prod *= axis_sizes.get(a, 1)
+        return dim % prod == 0
+
+    def leaf(x):
+        spec = [None] * x.ndim
+        dims = list(x.shape)
+        gdim = 0
+        # stacked group axis first (dims[0] == n_groups, small): replicated
+        if x.ndim >= 3:
+            gdim = 1
+        if (batch > 1 and ba and x.ndim > gdim and dims[gdim] == batch
+                and divides(ba, batch)):
+            spec[gdim] = ba
+        # shard the longest remaining axis on model if it's big & divisible
+        rest = [(i, d) for i, d in enumerate(dims)
+                if i > gdim and d >= 1024 and divides(tp, d)]
+        if rest and tp:
+            i, _ = max(rest, key=lambda t: t[1])
+            spec[i] = tp
+        return P(*spec)
+
+    return jax.tree.map(leaf, cache)
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint if an abstract mesh is available, else no-op.
+    Axes that do not exist on the mesh or do not divide the dim are
+    dropped (graceful degradation on small smoke meshes)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        fspec = _filter_axes(spec, mesh.axis_names)
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        fspec = _fit_divisibility(fspec, x.shape, sizes)
+        return jax.lax.with_sharding_constraint(x, fspec)
+    except Exception:
+        return x
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis under the current abstract mesh (1 if absent)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None:
+            return 1
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        return int(sizes.get(name, 1))
+    except Exception:
+        return 1
+
+
+def packed_gather_spec(name: str) -> P:
+    """Sharding for a QLoRA-packed weight at its use site: keep the
+    'model' (TP) shard, drop the 'data' (FSDP) shard — so the FSDP
+    all-gather happens on the PACKED int4 bytes (4× less wire traffic)
+    and dequantization runs after the collective."""
+    in_ax, out_ax = _DENSE_RULES.get(name, (None, None))
+    keep = lambda ax: ax if ax == TP else None
+    return P(keep(in_ax), keep(out_ax))
+
+
+def head_axis_choice(KH: int, G: int) -> tuple:
+    """For grouped-attention tensors laid out (..., KH, G, ...): which of
+    the two head dims can carry the 'model' axis?  Returns (kh_axis,
+    g_axis) — exactly one is 'model' when divisible, favoring KH."""
+    tp = mesh_axis_size(TP)
+    if tp <= 1:
+        return (None, None)
+    if KH % tp == 0:
+        return (TP, None)
+    if G % tp == 0:
+        return (None, TP)
+    return (None, None)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

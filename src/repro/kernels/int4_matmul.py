@@ -1,0 +1,61 @@
+"""QLoRA int4 matmul Pallas kernel:  y = x @ dequant(packed, scales).
+
+The packed base weight stays int4 in HBM (4× smaller than bf16) and is
+dequantized **in VMEM** tile-by-tile right before the MXU consumes it —
+the full-precision weight never materializes in HBM (the QLoRA memory
+story, adapted to the TPU hierarchy).
+
+Grid: (M/bm, N/bn).  Blocks:
+    x       (bm, K)
+    packed  (K, bn//2)  uint8  (two nibbles per byte, even|odd columns)
+    scales  (K, bn//qblock) f32 (blockwise absmax)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, p_ref, s_ref, o_ref, *, qblock: int):
+    x = x_ref[...].astype(jnp.float32)               # (bm, K)
+    packed = p_ref[...]                              # (K, bn//2) uint8
+    lo = (packed & 0xF).astype(jnp.int32) - 8        # even cols
+    hi = (packed >> 4).astype(jnp.int32) - 8         # odd cols
+    K, half = packed.shape
+    q = jnp.stack([lo, hi], axis=-1).reshape(K, half * 2).astype(jnp.float32)
+    s = s_ref[...]                                   # (K, bn//qblock)
+    w = (q.reshape(K, half * 2 // qblock, qblock)
+         * s[..., None]).reshape(K, half * 2)
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("qblock", "bm", "bn", "interpret"))
+def int4_matmul(x, packed, scales, *, qblock: int = 64, bm: int = 128,
+                bn: int = 256, interpret: bool = True):
+    """x (M,K) @ dequant(packed (K,N//2), scales (K,N//qblock)) → (M,N)."""
+    M, K = x.shape
+    N = packed.shape[1] * 2
+    bm, bn = min(bm, M), min(bn, N)
+    while M % bm:
+        bm //= 2
+    while N % bn or bn % qblock:
+        bn //= 2
+    assert N % bn == 0 and bn % qblock == 0 and M % bm == 0
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, qblock=qblock),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn // 2), lambda i, j: (0, j)),
+            pl.BlockSpec((K, bn // qblock), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(x, packed, scales)

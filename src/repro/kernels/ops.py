@@ -1,0 +1,42 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On this CPU container every kernel executes with ``interpret=True``
+(Pallas interpreter — bit-accurate kernel-body semantics); on TPU the same
+call sites pass ``interpret=False`` and compile to Mosaic.  ``INTERPRET``
+flips the default globally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import distill_kl as _kl
+from repro.kernels import flash_attention as _fa
+from repro.kernels import int4_matmul as _i4
+from repro.kernels import lora_matmul as _lm
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def lora_matmul(x, w, a, b, *, scale: float, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _lm.lora_matmul(x, w, a, b, scale=scale, **kw)
+
+
+def int4_matmul(x, packed, scales, *, qblock: int = 64, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _i4.int4_matmul(x, packed, scales, qblock=qblock, **kw)
+
+
+def distill_kl(teacher_probs, student_logits, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _kl.distill_kl(teacher_probs, student_logits, **kw)
+
+
+def distill_kl_mean(teacher_probs, student_logits, **kw):
+    return jnp.mean(distill_kl(teacher_probs, student_logits, **kw))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0, **kw):
+    kw.setdefault("interpret", INTERPRET)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window, **kw)

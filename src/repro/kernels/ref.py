@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition the kernels must match under
+``assert_allclose`` across shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul(x, w, a, b, scale: float):
+    """y = x @ W + scale · (x @ A) @ B   (f32 accumulation)."""
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    y = y + scale * ((xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def int4_matmul(x, packed, scales, block: int):
+    """y = x @ dequant(packed, scales)  — QLoRA base-weight path."""
+    from repro.peft.lora import dequantize
+    w = dequantize(packed, scales, block, dtype=jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def distill_kl(teacher_probs, student_logits, eps: float = 1e-9):
+    """Per-row KL(P_t ‖ softmax(z)) — fused softmax+KL contract.  (B,)"""
+    pt = jnp.clip(teacher_probs.astype(jnp.float32), eps, 1.0)
+    logq = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    return jnp.sum(pt * (jnp.log(pt) - logq), axis=-1)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float = None):
+    """Reference attention (B, H, S, D) with GQA-expanded k/v and optional
+    sliding window (k attendable iff 0 ≤ qpos−kpos < window)."""
+    B, H, S, D = q.shape
+    scale = scale or (D ** -0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((S, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,244 @@
+"""HLO post-processing: collective byte extraction + roofline terms.
+
+``cost_analysis()`` gives per-device FLOPs/bytes of the partitioned module;
+collective traffic is NOT included there, so we parse the compiled HLO text
+and sum output-buffer sizes of every collective op (per-device view —
+matches the per-chip denominator convention in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.launch import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)"
+    r"\[([\d,]*)\]")
+
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: {count, bytes} (per-device output bytes)."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-start":
+            continue      # async pair: the -done op carries the result type
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(type_str)
+    return out
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+# -- trip-count-aware attribution -------------------------------------------
+def _computation_spans(hlo_text: str):
+    """[(name, start, end)] for every top-level computation block."""
+    spans = []
+    cur_name, cur_start = None, None
+    for line_m in re.finditer(r"^.*$", hlo_text, re.M):
+        line = line_m.group(0)
+        if (line.startswith("%") or line.startswith("ENTRY ")) \
+                and line.rstrip().endswith("{"):
+            raw = line[6:] if line.startswith("ENTRY ") else line
+            name = raw.lstrip("%").split(" ")[0].split("(")[0]
+            cur_name, cur_start = name, line_m.end()
+        elif line.startswith("}") and cur_name is not None:
+            spans.append((cur_name, cur_start, line_m.start()))
+            cur_name = None
+    return spans
+
+
+_WHILE_BODY_RE = re.compile(
+    r"while\(%?[\w\.\-]+\), condition=%?[\w\.\-]+, body=%?([\w\.\-]+)")
+_TRIPS_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+
+
+def loop_multipliers(hlo_text: str) -> Dict[str, int]:
+    """Execution multiplier per computation: product of known_trip_count of
+    every enclosing while loop (ENTRY = 1).  XLA stamps known_trip_count in
+    each while op's backend_config."""
+    spans = _computation_spans(hlo_text)
+    edges: Dict[str, tuple] = {}      # body -> (parent computation, trips)
+    call_re = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+    called = set()                    # fusion/apply bodies (no HBM writes)
+    for name, s, e in spans:
+        for line in hlo_text[s:e].splitlines():
+            m = _WHILE_BODY_RE.search(line)
+            if m:
+                t = _TRIPS_RE.search(line)
+                edges[m.group(1)] = (name, int(t.group(1)) if t else 1)
+                continue
+            # fusion/call/reduce bodies inherit the caller's multiplier
+            for cm in call_re.finditer(line):
+                edges.setdefault(cm.group(1), (name, 1))
+                called.add(cm.group(1))
+    loop_multipliers._called = called      # consumed by weighted_hlo_cost
+
+    mult: Dict[str, int] = {}
+
+    def resolve(comp: str, depth=0) -> int:
+        if comp in mult:
+            return mult[comp]
+        if comp not in edges or depth > 64:
+            mult[comp] = 1
+            return 1
+        parent, trips = edges[comp]
+        mult[comp] = trips * resolve(parent, depth + 1)
+        return mult[comp]
+
+    for name, _, _ in spans:
+        resolve(name)
+    return mult
+
+
+def collective_stats_weighted(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Like collective_stats but each op is weighted by the product of the
+    trip counts of its enclosing while loops — the *dynamic* per-step
+    traffic (what the roofline wants)."""
+    mult = loop_multipliers(hlo_text)
+    spans = _computation_spans(hlo_text)
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for name, s, e in spans:
+        w = mult.get(name, 1)
+        for m in _OP_RE.finditer(hlo_text[s:e]):
+            type_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+            if suffix == "-start":
+                continue
+            out[kind]["count"] += w
+            out[kind]["bytes"] += _shape_bytes(type_str) * w
+    return out
+
+
+_DOT_RE = re.compile(
+    r"= (\S+) dot\(.*?lhs_contracting_dims=\{([\d,]*)\}", re.S)
+_OP_LINE_RE = re.compile(r"^\s+(%?[\w\.\-]+) = (\S+?) ([\w\-]+)\(", re.M)
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "while", "conditional", "call", "custom-call"}
+
+
+def _first_shape(type_str: str):
+    """(dtype, dims) of the first tensor in a result type string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d] or [1]
+    return m.group(1), dims
+
+
+def weighted_hlo_cost(hlo_text: str, *,
+                      inner_mult_cutoff: int = 0) -> Dict[str, float]:
+    """Exact trip-weighted dynamic cost from the compiled HLO:
+
+    - flops: every ``dot`` op — 2 × prod(result dims) × K, where K is the
+      product of the lhs contracting dims — × enclosing-loop trip counts.
+      (Elementwise flops are ignored: MXU dots dominate by >100×.)
+    - bytes: Σ over materializing ops of result bytes × trips × 2
+      (a write + downstream read per materialized buffer — the standard
+      HBM-traffic proxy when fusion interiors are invisible).
+    - bytes_outer: same sum restricted to ops whose loop multiplier is ≤
+      ``inner_mult_cutoff`` — buffers inside deeper loop nests are
+      attention-chunk tiles that the Pallas flash kernel keeps in VMEM on
+      the TPU target; bytes_outer models that deployment.
+    """
+    mult = loop_multipliers(hlo_text)
+    called = getattr(loop_multipliers, "_called", set())
+    spans = _computation_spans(hlo_text)
+    flops = 0.0
+    bytes_ = 0.0
+    bytes_outer = 0.0
+    for name, s, e in spans:
+        w = mult.get(name, 1)
+        in_fusion_body = name in called      # interior: no HBM traffic
+        body = hlo_text[s:e]
+        # symbol table: op name -> result type string (incl. parameters)
+        types = {}
+        for line in body.splitlines():
+            tm = re.match(r"\s+(%?[\w\.\-]+) = (\([^=]*?\)|\S+?) [\w\-]+\(",
+                          line)
+            if tm:
+                types[tm.group(1).lstrip("%")] = tm.group(2)
+        for line in body.splitlines():
+            om = _OP_LINE_RE.match(line)
+            if not om:
+                continue
+            opkind = om.group(3)
+            if opkind in _SKIP_OPS:
+                continue
+            if not in_fusion_body:
+                b = _shape_bytes(om.group(2)) * w * 2
+                bytes_ += b
+                if not inner_mult_cutoff or w <= inner_mult_cutoff:
+                    bytes_outer += b
+            if opkind == "dot":
+                fs = _first_shape(om.group(2))
+                if fs is None:
+                    continue
+                _, out_dims = fs
+                out_n = 1
+                for d in out_dims:
+                    out_n *= d
+                lhs_m = re.search(r"dot\(%?([\w\.\-]+)", line)
+                km = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                K = 1
+                if lhs_m and km:
+                    lt = types.get(lhs_m.group(1))
+                    if lt:
+                        lfs = _first_shape(lt)
+                        if lfs:
+                            lhs_dims = lfs[1]
+                            for ci in km.group(1).split(","):
+                                if ci and int(ci) < len(lhs_dims):
+                                    K *= lhs_dims[int(ci)]
+                flops += 2.0 * out_n * K * w
+    return {"flops": flops, "bytes": bytes_, "bytes_outer": bytes_outer}
+
+
+def roofline_terms(*, flops_per_chip: float, hbm_bytes_per_chip: float,
+                   collective_bytes_per_chip: float) -> Dict[str, float]:
+    """Three-term roofline (seconds).  Inputs are per-chip quantities from
+    the partitioned module, so no further division by chip count."""
+    compute = flops_per_chip / mesh_mod.PEAK_FLOPS_BF16
+    memory = hbm_bytes_per_chip / mesh_mod.HBM_BW
+    collective = collective_bytes_per_chip / mesh_mod.ICI_BW
+    dom = max((("compute", compute), ("memory", memory),
+               ("collective", collective)), key=lambda t: t[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dom}
+
+
+def remat_duplication(hlo_text: str) -> float:
+    """Heuristic recompute indicator: ratio of fusion ops to unique fusion
+    signatures (1.0 = no duplicate computation)."""
+    sigs = re.findall(r"fusion\(([^)]*)\)", hlo_text)
+    if not sigs:
+        return 1.0
+    return len(sigs) / max(1, len(set(sigs)))

@@ -1,0 +1,150 @@
+"""Feed-forward blocks: SwiGLU MLP and capacity-based top-k MoE.
+
+MoE uses scatter/gather dispatch into per-expert capacity buffers
+(drop-on-overflow), which is GSPMD-expressible: experts are sharded along
+the 'model' mesh axis (expert parallelism) while tokens are sharded along
+'data', so dispatch/combine lower to the all-to-all-equivalent collective
+traffic the roofline analysis measures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, lora_pair, rms_norm, swiglu, weight
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_params(key, cfg, dtype, d_ff=None):
+    import jax.random as jr
+    from repro.models.common import init_dense
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2 = jr.split(key)
+    return {
+        "ln2": jnp.ones((d,), dtype),
+        "w_in": init_dense(k1, (d, 2 * ff), dtype),
+        "w_out": init_dense(k2, (ff, d), dtype,
+                            scale=0.5 / (d ** 0.5 * cfg.n_layers ** 0.5)),
+    }
+
+
+def mlp(params, cfg, x):
+    xn = rms_norm(x, params["ln2"], cfg.norm_eps)
+    h = swiglu(dense(xn, weight(params, "w_in"), lora_pair(params, "w_in", cfg.lora)))
+    return x + dense(h, weight(params, "w_out"), lora_pair(params, "w_out", cfg.lora))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def moe_params(key, cfg, dtype):
+    import jax.random as jr
+    from repro.models.common import init_dense
+    m, d = cfg.moe, cfg.d_model
+    ks = jr.split(key, 5)
+    p = {
+        "ln2": jnp.ones((d,), dtype),
+        "router": init_dense(ks[0], (d, m.n_experts), jnp.float32),
+        "w_in": init_dense(ks[1], (m.n_experts, d, 2 * m.d_ff), dtype),
+        "w_out": init_dense(ks[2], (m.n_experts, m.d_ff, d), dtype,
+                            scale=0.5 / (d ** 0.5 * cfg.n_layers ** 0.5)),
+    }
+    if m.n_shared_experts:
+        sff = m.d_ff * m.n_shared_experts
+        p["shared_w_in"] = init_dense(ks[3], (d, 2 * sff), dtype)
+        p["shared_w_out"] = init_dense(
+            ks[4], (sff, d), dtype,
+            scale=0.5 / (d ** 0.5 * cfg.n_layers ** 0.5))
+    return p
+
+
+def _capacity(n_tokens: int, m) -> int:
+    c = int(math.ceil(m.top_k * n_tokens * m.capacity_factor / m.n_experts))
+    return max(8, -(-c // 8) * 8)      # round up to 8
+
+
+def moe(params, cfg, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, balance_loss).  x: (B, S, d)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xn = rms_norm(x, params["ln2"], cfg.norm_eps).reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xn.astype(jnp.float32),
+                        params["router"])                       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)       # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], m.n_experts), axis=0)
+    router_mean = probs.mean(axis=0)
+    balance = m.n_experts * jnp.sum(density * router_mean)
+
+    # position-in-expert via SORT-based ranking — O(T·k) memory.  The
+    # (T·k, E) one-hot cumsum this replaces was both the MoE memory hog
+    # (50 GB at kimi scale) and a per-step collective storm inside the
+    # cumsum loop (EXPERIMENTS.md §Perf, MoE iteration).
+    flat_e = expert_ids.reshape(-1)                             # (T*k,)
+    TK = flat_e.shape[0]
+    # routing metadata is tiny (T·k ints) — replicate it so the sort runs
+    # redundantly per device instead of as a distributed bitonic sort
+    # (a ×100 collective-op storm under GSPMD; §Perf kimi iteration)
+    from repro.distributed.sharding import constrain as _c
+    from jax.sharding import PartitionSpec as _P
+    flat_e = _c(flat_e, _P(None))
+    order = jnp.argsort(flat_e, stable=True)                    # (T*k,)
+    order = _c(order, _P(None))
+    sorted_e = flat_e[order]
+    # first index of each expert's run within the sorted stream
+    starts = jnp.searchsorted(sorted_e, jnp.arange(m.n_experts))
+    pos_sorted = jnp.arange(TK) - starts[sorted_e]
+    pos = jnp.zeros((TK,), jnp.int32).at[order].set(pos_sorted)
+    C = _capacity(T, m)
+    keep = pos < C
+
+    # dispatch: scatter tokens into (E, C, d) buffers, expert-sharded on
+    # 'model' (expert parallelism) — GSPMD lowers the token→owner exchange
+    # to all-to-all instead of all-reducing a replicated buffer.
+    # (NOTE §Perf: replicating these buffers at small T was tried as a
+    # decode optimization and REFUTED — it forces full expert-weight
+    # replication, 157 GiB/dev at jamba scale.)
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import constrain
+    espec = P("model", None, None)
+    buf = jnp.zeros((m.n_experts, C, d), xn.dtype)
+    buf = constrain(buf, espec)
+    tok_idx = jnp.repeat(jnp.arange(T), m.top_k)
+    x_flat = xn[tok_idx] * keep[:, None].astype(xn.dtype)
+    safe_pos = jnp.where(keep, pos, C - 1)
+    buf = buf.at[flat_e, safe_pos].add(
+        jnp.where(keep[:, None], x_flat, 0))
+    buf = constrain(buf, espec)
+
+    # expert computation (sharded over 'model' on the E axis)
+    h = jnp.einsum("ecd,edf->ecf", buf, weight(params, "w_in").astype(buf.dtype))
+    h = constrain(h, espec)
+    h = swiglu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h,
+                         weight(params, "w_out").astype(h.dtype))  # (E,C,d)
+    out_buf = constrain(out_buf, espec)
+
+    # combine: gather back, weight by gates
+    y_k = out_buf[flat_e, safe_pos] * keep[:, None].astype(out_buf.dtype)
+    y_k = y_k.reshape(T, m.top_k, d) * gate_vals[..., None].astype(out_buf.dtype)
+    y = y_k.sum(axis=1)
+
+    if m.n_shared_experts:
+        sh = swiglu(dense(xn, weight(params, "shared_w_in"),
+                          lora_pair(params, "shared_w_in", cfg.lora)))
+        y = y + dense(sh, weight(params, "shared_w_out"),
+                      lora_pair(params, "shared_w_out", cfg.lora))
+
+    return x + y.reshape(B, S, d).astype(x.dtype), balance

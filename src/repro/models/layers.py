@@ -1,0 +1,133 @@
+"""Layer-group construction and application.
+
+A model is ``cfg.pattern`` applied ``cfg.n_groups`` times; parameters are
+stacked along a leading group axis and applied under ``lax.scan`` (+remat),
+keeping the HLO one-pattern-period big regardless of depth.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import ssm, xlstm
+
+MIXERS = ("attn", "mla", "mamba", "mlstm", "slstm")
+FFNS = ("mlp", "moe", "none")
+
+
+def init_layer_params(key, cfg, mixer: str, ffn: str, dtype,
+                      cross: bool = False) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {}
+    if mixer == "attn":
+        p.update(attn.gqa_params(k1, cfg, dtype))
+    elif mixer == "mla":
+        p.update(attn.mla_params(k1, cfg, dtype))
+    elif mixer == "mamba":
+        p.update(ssm.mamba_params(k1, cfg, dtype))
+    elif mixer == "mlstm":
+        p.update(xlstm.mlstm_params(k1, cfg, dtype))
+    elif mixer == "slstm":
+        p.update(xlstm.slstm_params(k1, cfg, dtype))
+    else:
+        raise ValueError(mixer)
+    if cross:
+        p.update(attn.gqa_params(k3, cfg, dtype, cross=True))
+    if ffn == "mlp":
+        ffd = cfg.d_ff
+        if ffd == 0:  # xlstm sLSTM post-FFN factor (128-aligned)
+            ffd = int(cfg.d_model * cfg.xlstm.slstm_ffn_factor)
+            ffd = -(-ffd // 128) * 128
+        p.update(ffn_mod.mlp_params(k2, cfg, dtype, d_ff=ffd))
+    elif ffn == "moe":
+        p.update(ffn_mod.moe_params(k2, cfg, dtype))
+    elif ffn != "none":
+        raise ValueError(ffn)
+    return p
+
+
+def apply_layer_train(cfg, p: Dict, x, positions, mixer: str, ffn: str, *,
+                      causal: bool = True, window=None, enc_kv=None,
+                      mlstm_chunkwise: bool = False, anchor: bool = True):
+    """Full-sequence layer.  Returns (x, cache, balance_loss)."""
+    balance = jnp.zeros((), jnp.float32)
+    if mixer == "attn":
+        x, cache = attn.attn_train(p, cfg, x, positions, causal=causal,
+                                   window=window, anchor=anchor)
+    elif mixer == "mla":
+        x, cache = attn.mla_train(p, cfg, x, positions,
+                                  window=window or 0, anchor=anchor)
+    elif mixer == "mamba":
+        x, cache = ssm.mamba_train(p, cfg, x)
+    elif mixer == "mlstm":
+        fn = (xlstm.mlstm_train_chunkwise if mlstm_chunkwise
+              else xlstm.mlstm_train)
+        x, cache = fn(p, cfg, x)
+    elif mixer == "slstm":
+        x, cache = xlstm.slstm_train(p, cfg, x)
+    else:
+        raise ValueError(mixer)
+    if enc_kv is not None:
+        x = attn.cross_attn_train(p, cfg, x, enc_kv)
+    if ffn == "mlp":
+        x = ffn_mod.mlp(p, cfg, x)
+    elif ffn == "moe":
+        x, balance = ffn_mod.moe(p, cfg, x)
+    return x, cache, balance
+
+
+def apply_layer_decode(cfg, p: Dict, x, pos, cache, mixer: str, ffn: str, *,
+                       window: int = 0, cross_kv=None):
+    """One-token layer step.  Returns (x, new_cache)."""
+    if mixer == "attn":
+        x, cache = attn.attn_decode(p, cfg, x, pos, *cache, window=window)
+    elif mixer == "mla":
+        x, cache = attn.mla_decode(p, cfg, x, pos, *cache, window=window)
+    elif mixer == "mamba":
+        x, cache = ssm.mamba_decode(p, cfg, x, *cache)
+    elif mixer == "mlstm":
+        x, cache = xlstm.mlstm_decode(p, cfg, x, cache)
+    elif mixer == "slstm":
+        x, cache = xlstm.slstm_decode(p, cfg, x, cache)
+    else:
+        raise ValueError(mixer)
+    if cross_kv is not None:
+        x = attn.cross_attn_decode(p, cfg, x, *cross_kv)
+    if ffn == "mlp":
+        x = ffn_mod.mlp(p, cfg, x)
+    elif ffn == "moe":
+        x, _ = ffn_mod.moe(p, cfg, x)
+    return x, cache
+
+
+def cache_struct(cfg, mixer: str, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Shapes of one layer's decode cache (no leading group axis)."""
+    d, H, KH, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if mixer == "attn":
+        return (jnp.zeros((batch, seq, KH, D), dtype),
+                jnp.zeros((batch, seq, KH, D), dtype))
+    if mixer == "mla":
+        m = cfg.mla
+        return (jnp.zeros((batch, seq, m.kv_lora_rank), dtype),
+                jnp.zeros((batch, seq, m.qk_rope_head_dim), dtype))
+    if mixer == "mamba":
+        mc = cfg.mamba
+        ed = mc.expand * d
+        return (jnp.zeros((batch, ed, mc.d_state), jnp.float32),
+                jnp.zeros((batch, mc.d_conv - 1, ed), dtype))
+    if mixer == "mlstm":
+        xc = cfg.xlstm
+        ed = xc.expand * d
+        hd = ed // H
+        return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+                jnp.zeros((batch, H, hd), jnp.float32),
+                jnp.zeros((batch, H), jnp.float32),
+                jnp.zeros((batch, xc.conv_width - 1, ed), dtype))
+    if mixer == "slstm":
+        z = jnp.zeros((batch, d), jnp.float32)
+        return (z, z, z, z)
+    raise ValueError(mixer)

@@ -1,0 +1,137 @@
+"""Mamba (S6 selective scan) mixer — Jamba's recurrent component.
+
+Training uses a chunked selective scan: an outer ``lax.scan`` over sequence
+chunks carrying the SSM state, with a parallel ``associative_scan`` inside
+each chunk — bounding live memory to O(chunk · ed · N) while keeping the
+HLO compact.  Decode is a single recurrent update (O(1) per token), which is
+what makes jamba/long_500k legal (DESIGN.md §6.7).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, lora_pair, rms_norm
+
+SEQ_CHUNK = 128
+
+
+def mamba_params(key, cfg, dtype):
+    import jax.random as jr
+    from repro.models.common import init_dense
+    mc, d = cfg.mamba, cfg.d_model
+    ed = mc.expand * d
+    dt_rank = mc.dt_rank or -(-d // 16)
+    ks = jr.split(key, 6)
+    dt_init = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[5], (ed,), jnp.float32) *
+                (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))))
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "in_proj": init_dense(ks[0], (d, 2 * ed), dtype),
+        "conv_w": init_dense(ks[1], (mc.d_conv, ed), dtype, scale=0.5),
+        "conv_b": jnp.zeros((ed,), dtype),
+        "x_proj": init_dense(ks[2], (ed, dt_rank + 2 * mc.d_state), dtype),
+        "dt_w": init_dense(ks[3], (dt_rank, ed), dtype),
+        "dt_b": dt_init.astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (ed, mc.d_state))),
+        "D": jnp.ones((ed,), jnp.float32),
+        "out_proj": init_dense(ks[4], (ed, d), dtype,
+                               scale=0.5 / (d ** 0.5 * cfg.n_layers ** 0.5)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B,S,ed); w: (width, ed)."""
+    width, ed = w.shape
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=ed)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(params, cfg, x_c):
+    """dt (B,S,ed) f32, B/C (B,S,N) f32, A (ed,N) f32."""
+    mc = cfg.mamba
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    xdbc = dense(x_c, params["x_proj"]).astype(jnp.float32)
+    dt_in, Bm, Cm = jnp.split(xdbc, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dt_in @ params["dt_w"].astype(jnp.float32) + params["dt_b"])
+    A = -jnp.exp(params["A_log"])
+    return dt, Bm, Cm, A
+
+
+def mamba_train(params, cfg, x, *, seq_chunk: int = SEQ_CHUNK
+                ) -> Tuple[jnp.ndarray, Tuple]:
+    """x: (B,S,d).  Returns (y, (ssm_state, conv_state)) for prefill reuse."""
+    mc = cfg.mamba
+    B, S, d = x.shape
+    ed, N = mc.expand * d, mc.d_state
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    xu = dense(xn, params["in_proj"], lora_pair(params, "in_proj", cfg.lora))
+    x_in, z = jnp.split(xu, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]))
+    dt, Bm, Cm, A = _ssm_inputs(params, cfg, x_c)
+
+    cs = min(seq_chunk, S)
+    assert S % cs == 0
+    nchunks = S // cs
+
+    def chunk_body(h, idx):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * cs, cs, axis=1)
+        dt_c, B_c, C_c, x_cc = sl(dt), sl(Bm), sl(Cm), sl(x_c)
+        da = jnp.exp(dt_c[..., None] * A)                     # (B,cs,ed,N)
+        db = (dt_c * x_cc.astype(jnp.float32))[..., None] * B_c[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da, db), axis=1)
+        h_t = a_cum * h[:, None] + b_cum                      # (B,cs,ed,N)
+        y_c = jnp.einsum("bsen,bsn->bse", h_t, C_c)
+        y_c = y_c + params["D"] * x_cc.astype(jnp.float32)
+        return h_t[:, -1], y_c
+
+    h0 = jnp.zeros((B, ed, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_body, h0, jnp.arange(nchunks))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, ed)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = dense(y, params["out_proj"], lora_pair(params, "out_proj", cfg.lora))
+    conv_state = x_in[:, S - (mc.d_conv - 1):, :]             # (B, w-1, ed)
+    return x + out, (h_last, conv_state)
+
+
+def mamba_decode(params, cfg, x, ssm_state, conv_state
+                 ) -> Tuple[jnp.ndarray, Tuple]:
+    """One-token recurrent step.  x: (B,1,d); ssm_state: (B,ed,N) f32;
+    conv_state: (B, d_conv-1, ed)."""
+    mc = cfg.mamba
+    B = x.shape[0]
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    xu = dense(xn, params["in_proj"], lora_pair(params, "in_proj", cfg.lora))
+    x_in, z = jnp.split(xu, 2, axis=-1)                       # (B,1,ed)
+    window = jnp.concatenate([conv_state, x_in], axis=1)      # (B,w,ed)
+    conv = jnp.einsum("bwe,we->be", window.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    x_c = jax.nn.silu(conv + params["conv_b"].astype(jnp.float32)
+                      )[:, None, :].astype(x.dtype)           # (B,1,ed)
+    dt, Bm, Cm, A = _ssm_inputs(params, cfg, x_c)
+    da = jnp.exp(dt[:, 0, :, None] * A)                       # (B,ed,N)
+    db = (dt[:, 0] * x_c[:, 0].astype(jnp.float32))[..., None] \
+        * Bm[:, 0, None, :]
+    h = da * ssm_state + db
+    y = jnp.einsum("ben,bn->be", h, Cm[:, 0])
+    y = y + params["D"] * x_c[:, 0].astype(jnp.float32)
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z)
+    out = dense(y, params["out_proj"], lora_pair(params, "out_proj", cfg.lora))
+    new_conv_state = window[:, 1:, :]
+    return x + out, (h, new_conv_state)

@@ -1,0 +1,278 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both follow the stabilized exponential-gating formulation of
+arXiv:2405.04517.  Training runs a sequential ``lax.scan`` over time — HLO
+is compact; the chunkwise-parallel mLSTM formulation is a §Perf lever
+implemented in ``mlstm_train_chunkwise`` (beyond-paper optimization).
+Decode is a single O(1) recurrent update, making long_500k natural.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, lora_pair, rms_norm
+
+
+def _group_norm(x, scale, heads, eps=1e-5):
+    """Per-head group norm over the head feature dim.  x: (..., ed)."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], heads, shp[-1] // heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_params(key, cfg, dtype):
+    import jax.random as jr
+    from repro.models.common import init_dense
+    xc, d, H = cfg.xlstm, cfg.d_model, cfg.n_heads
+    ed = xc.expand * d
+    ks = jr.split(key, 7)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "up_proj": init_dense(ks[0], (d, 2 * ed), dtype),
+        "conv_w": init_dense(ks[1], (xc.conv_width, ed), dtype, scale=0.5),
+        "conv_b": jnp.zeros((ed,), dtype),
+        "wq": init_dense(ks[2], (ed, ed), dtype),
+        "wk": init_dense(ks[3], (ed, ed), dtype),
+        "wv": init_dense(ks[4], (ed, ed), dtype),
+        "w_if": init_dense(ks[5], (ed, 2 * H), jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "gn": jnp.ones((ed,), dtype),
+        "down_proj": init_dense(ks[6], (ed, d), dtype,
+                                scale=0.5 / (d ** 0.5 * cfg.n_layers ** 0.5)),
+    }
+
+
+def _mlstm_qkvif(params, cfg, x):
+    from repro.models.ssm import _causal_conv
+    xc, H = cfg.xlstm, cfg.n_heads
+    B, S, d = x.shape
+    ed = xc.expand * d
+    D = ed // H
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    xu = dense(xn, params["up_proj"], lora_pair(params, "up_proj", cfg.lora))
+    x_in, z = jnp.split(xu, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]))
+    q = dense(x_c, params["wq"], lora_pair(params, "wq", cfg.lora))
+    k = dense(x_c, params["wk"], lora_pair(params, "wk", cfg.lora))
+    v = dense(x_in, params["wv"], lora_pair(params, "wv", cfg.lora))
+    q = q.reshape(B, S, H, D).astype(jnp.float32)
+    k = k.reshape(B, S, H, D).astype(jnp.float32) * (D ** -0.5)
+    v = v.reshape(B, S, H, D).astype(jnp.float32)
+    gif = x_c.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    li = gif[..., :H]                                  # log input gate (B,S,H)
+    lf = jax.nn.log_sigmoid(gif[..., H:])              # log forget gate
+    return z, q, k, v, li, lf
+
+
+def _mlstm_out(params, cfg, x, h, z):
+    B, S, _, _ = h.shape
+    ed = h.shape[-1] * cfg.n_heads
+    hflat = _group_norm(h.reshape(B, S, ed).astype(x.dtype), params["gn"],
+                        cfg.n_heads)
+    y = hflat * jax.nn.silu(z)
+    return x + dense(y, params["down_proj"],
+                     lora_pair(params, "down_proj", cfg.lora))
+
+
+def mlstm_train(params, cfg, x) -> Tuple[jnp.ndarray, Tuple]:
+    """Sequential-scan mLSTM (paper-faithful baseline).  x: (B,S,d)."""
+    z, q, k, v, li, lf = _mlstm_qkvif(params, cfg, x)
+    B, S, H, D = q.shape
+
+    def step(carry, t):
+        C, n, m = carry                                # (B,H,D,D),(B,H,D),(B,H)
+        qt, kt, vt = q[:, t], k[:, t], v[:, t]
+        m_new = jnp.maximum(lf[:, t] + m, li[:, t])
+        fp = jnp.exp(lf[:, t] + m - m_new)[..., None]
+        ip = jnp.exp(li[:, t] - m_new)[..., None]
+        C = fp[..., None] * C + ip[..., None] * (kt[..., :, None]
+                                                 * vt[..., None, :])
+        n = fp * n + ip * kt
+        num = jnp.einsum("bhdk,bhd->bhk", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        h = num / den
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(S))
+    h = hs.transpose(1, 0, 2, 3)                       # (B,S,H,D)
+    return _mlstm_out(params, cfg, x, h, z), (C, n, m)
+
+
+def mlstm_train_chunkwise(params, cfg, x, *, chunk: int = 64
+                          ) -> Tuple[jnp.ndarray, Tuple]:
+    """Chunkwise-parallel mLSTM (beyond-paper §Perf path): intra-chunk
+    attention-style parallelism + inter-chunk state recurrence.  Numerically
+    equivalent to ``mlstm_train`` (validated in tests)."""
+    z, q, k, v, li, lf = _mlstm_qkvif(params, cfg, x)
+    B, S, H, D = q.shape
+    cs = min(chunk, S)
+    assert S % cs == 0
+    nc = S // cs
+
+    qs = q.reshape(B, nc, cs, H, D).transpose(1, 0, 3, 2, 4)  # (nc,B,H,cs,D)
+    ks = k.reshape(B, nc, cs, H, D).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, nc, cs, H, D).transpose(1, 0, 3, 2, 4)
+    lis = li.reshape(B, nc, cs, H).transpose(1, 0, 3, 2)      # (nc,B,H,cs)
+    lfs = lf.reshape(B, nc, cs, H).transpose(1, 0, 3, 2)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                                # scaled state, log-scale m
+        qc, kc, vc, lic, lfc = inp
+        F = jnp.cumsum(lfc, axis=-1)                   # inclusive (B,H,cs)
+        # intra-chunk log weights  b[t,s] = F_t - F_s + li_s  (s ≤ t)
+        bmat = F[..., :, None] - F[..., None, :] + lic[..., None, :]
+        tri = jnp.tril(jnp.ones((cs, cs), bool))
+        bmat = jnp.where(tri, bmat, -jnp.inf)
+        # inter-chunk log weight for each t: a_t = F_t (+ carry scale m)
+        a = F + m[..., None]
+        m_t = jnp.maximum(bmat.max(-1), a)             # per-position stabilizer
+        intra = jnp.exp(bmat - m_t[..., None])         # (B,H,cs,cs)
+        inter = jnp.exp(a - m_t)                       # (B,H,cs)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qc, kc) * intra
+        num = (jnp.einsum("bhts,bhsd->bhtd", scores, vc)
+               + inter[..., None] * jnp.einsum("bhtd,bhdk->bhtk", qc, C))
+        den_vec = (scores.sum(-1)
+                   + inter * jnp.einsum("bhtd,bhd->bht", qc, n))
+        den = jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_t))[..., None]
+        h = num / den                                  # (B,H,cs,D)
+        # state update to end of chunk
+        F_last = F[..., -1:]
+        m_new = jnp.maximum(F_last[..., 0] + m,
+                            (F_last - F + lic).max(-1))
+        w_in = jnp.exp(F_last - F + lic - m_new[..., None])   # (B,H,cs)
+        C_new = (jnp.exp(F_last[..., 0] + m - m_new)[..., None, None] * C
+                 + jnp.einsum("bhs,bhsd,bhsk->bhdk", w_in, kc, vc))
+        n_new = (jnp.exp(F_last[..., 0] + m - m_new)[..., None] * n
+                 + jnp.einsum("bhs,bhsd->bhd", w_in, kc))
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qs, ks, vs, lis, lfs))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)
+    return _mlstm_out(params, cfg, x, h, z), (C, n, m)
+
+
+def mlstm_decode(params, cfg, x, state) -> Tuple[jnp.ndarray, Tuple]:
+    """x: (B,1,d); state = (C (B,H,D,D), n (B,H,D), m (B,H), conv (B,w-1,ed))."""
+    xc, H = cfg.xlstm, cfg.n_heads
+    B, _, d = x.shape
+    ed = xc.expand * d
+    D = ed // H
+    C, n, m, conv_state = state
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    xu = dense(xn, params["up_proj"], lora_pair(params, "up_proj", cfg.lora))
+    x_in, z = jnp.split(xu, 2, axis=-1)
+    window = jnp.concatenate([conv_state, x_in], axis=1)
+    conv = jnp.einsum("bwe,we->be", window.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    x_c = jax.nn.silu(conv + params["conv_b"].astype(jnp.float32)
+                      )[:, None, :].astype(x.dtype)
+    q = dense(x_c, params["wq"], lora_pair(params, "wq", cfg.lora))
+    k = dense(x_c, params["wk"], lora_pair(params, "wk", cfg.lora))
+    v = dense(x_in, params["wv"], lora_pair(params, "wv", cfg.lora))
+    q = q.reshape(B, H, D).astype(jnp.float32)
+    k = k.reshape(B, H, D).astype(jnp.float32) * (D ** -0.5)
+    v = v.reshape(B, H, D).astype(jnp.float32)
+    gif = x_c[:, 0].astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    li, lf = gif[..., :H], jax.nn.log_sigmoid(gif[..., H:])
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)[..., None]
+    ip = jnp.exp(li - m_new)[..., None]
+    C = fp[..., None] * C + ip[..., None] * (k[..., :, None] * v[..., None, :])
+    n = fp * n + ip * k
+    num = jnp.einsum("bhdk,bhd->bhk", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den)[:, None]                            # (B,1,H,D)
+    y = _mlstm_out(params, cfg, x, h, z)
+    return y, (C, n, m_new, window[:, 1:, :])
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_params(key, cfg, dtype):
+    import jax.random as jr
+    from repro.models.common import init_dense
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jr.split(key, 2)
+    b = jnp.zeros((4 * d,)).at[d:2 * d].set(3.0)       # forget-gate bias +3
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_gates": init_dense(ks[0], (d, 4 * d), dtype),
+        "r_gates": init_dense(ks[1], (H, hd, 4 * hd), jnp.float32, scale=0.5),
+        "b_gates": b,
+        "gn": jnp.ones((d,), dtype),
+    }
+
+
+def _slstm_step(params, cfg, gx_t, carry):
+    """One sLSTM cell step.  gx_t: (B, 4d) f32 input-side gate preacts."""
+    H = cfg.n_heads
+    c, n, h, m = carry                                  # each (B, d)
+    B, d = c.shape
+    hd = d // H
+    gh = jnp.einsum("bhk,hko->bho", h.reshape(B, H, hd),
+                    params["r_gates"])                  # (B,H,4*hd)
+    # reorder per-head [i|f|z|o] blocks to match gx's full-d [i|f|z|o] layout
+    gh = gh.reshape(B, H, 4, hd).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    g = gx_t + gh
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    li = gi
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, li)
+    ip = jnp.exp(li - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(gz)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def _slstm_gx(params, cfg, x):
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    gx = dense(xn, params["w_gates"], lora_pair(params, "w_gates", cfg.lora))
+    # reorder (4d) → per-head blocks:  w_gates emits [i|f|z|o] over full d,
+    # matching the recurrent layout because r_gates emits the same split.
+    return gx.astype(jnp.float32) + params["b_gates"]
+
+
+def slstm_train(params, cfg, x) -> Tuple[jnp.ndarray, Tuple]:
+    B, S, d = x.shape
+    gx = _slstm_gx(params, cfg, x)                      # (B,S,4d)
+
+    def step(carry, t):
+        new = _slstm_step(params, cfg, gx[:, t], carry)
+        return new, new[2]
+
+    z0 = jnp.zeros((B, d), jnp.float32)
+    carry0 = (z0, z0, z0, z0)
+    carry, hs = jax.lax.scan(step, carry0, jnp.arange(S))
+    h = hs.transpose(1, 0, 2)                           # (B,S,d)
+    y = _group_norm(h.astype(x.dtype), params["gn"], cfg.n_heads)
+    return x + y, carry
+
+
+def slstm_decode(params, cfg, x, state) -> Tuple[jnp.ndarray, Tuple]:
+    gx = _slstm_gx(params, cfg, x)                      # (B,1,4d)
+    carry = _slstm_step(params, cfg, gx[:, 0], state)
+    y = _group_norm(carry[2][:, None].astype(x.dtype), params["gn"],
+                    cfg.n_heads)
+    return x + y, carry

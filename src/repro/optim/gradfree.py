@@ -1,0 +1,193 @@
+"""Gradient-free optimizers with COBYLA-compatible ``maxiter`` semantics.
+
+The paper drives its quantum models with Qiskit's COBYLA and regulates a
+single knob — ``maxiter`` (function-evaluation budget per local round).
+COBYLA internals are irrelevant to the contribution (DESIGN.md §6.2); what
+matters is a black-box minimizer whose progress is metered in iterations.
+We provide:
+
+ - ``NelderMead`` : simplex method (default; deterministic, robust on the
+   ≤30-parameter VQC/QCNN landscapes).  One "iteration" = one simplex
+   transformation (1–4 function evals), matching scipy/COBYLA's notion of
+   a metered step.
+ - ``SPSA``       : simultaneous-perturbation stochastic approximation
+   (2 evals/iteration), the standard QML alternative.
+
+Both are **resumable**: state in/out, so the federated loop can run
+``k`` iterations this round, have the controller re-regulate ``maxiter``,
+and continue from the same optimizer state next round — exactly the
+paper's regulated-optimizer execution model (Alg. 1 lines 11–17).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Nelder–Mead
+# ---------------------------------------------------------------------------
+@dataclass
+class NMState:
+    simplex: np.ndarray          # (n+1, n)
+    fvals: np.ndarray            # (n+1,)
+    n_evals: int = 0
+    n_iters: int = 0
+
+    @property
+    def best_x(self) -> np.ndarray:
+        return self.simplex[int(np.argmin(self.fvals))]
+
+    @property
+    def best_f(self) -> float:
+        return float(np.min(self.fvals))
+
+
+def nm_init(fn: Callable, x0: np.ndarray, *, step: float = 0.25) -> NMState:
+    x0 = np.asarray(x0, np.float64)
+    n = x0.shape[0]
+    simplex = np.tile(x0, (n + 1, 1))
+    for i in range(n):
+        simplex[i + 1, i] += step if x0[i] == 0 else step * abs(x0[i]) + step
+    fvals = np.array([float(fn(s)) for s in simplex])
+    return NMState(simplex, fvals, n_evals=n + 1)
+
+
+def nm_run(fn: Callable, state: NMState, maxiter: int,
+           *, alpha=1.0, gamma=2.0, rho=0.5, sigma=0.5) -> NMState:
+    """Run ``maxiter`` simplex iterations from ``state`` (resumable)."""
+    simplex = state.simplex.copy()
+    fvals = state.fvals.copy()
+    n = simplex.shape[1]
+    evals = 0
+
+    for _ in range(max(0, int(maxiter))):
+        order = np.argsort(fvals)
+        simplex, fvals = simplex[order], fvals[order]
+        centroid = simplex[:-1].mean(axis=0)
+
+        xr = centroid + alpha * (centroid - simplex[-1])
+        fr = float(fn(xr)); evals += 1
+        if fr < fvals[0]:
+            xe = centroid + gamma * (xr - centroid)
+            fe = float(fn(xe)); evals += 1
+            if fe < fr:
+                simplex[-1], fvals[-1] = xe, fe
+            else:
+                simplex[-1], fvals[-1] = xr, fr
+        elif fr < fvals[-2]:
+            simplex[-1], fvals[-1] = xr, fr
+        else:
+            xc = centroid + rho * (simplex[-1] - centroid)
+            fc = float(fn(xc)); evals += 1
+            if fc < fvals[-1]:
+                simplex[-1], fvals[-1] = xc, fc
+            else:   # shrink
+                for i in range(1, n + 1):
+                    simplex[i] = simplex[0] + sigma * (simplex[i] - simplex[0])
+                    fvals[i] = float(fn(simplex[i])); evals += 1
+
+    return NMState(simplex, fvals, state.n_evals + evals,
+                   state.n_iters + max(0, int(maxiter)))
+
+
+# ---------------------------------------------------------------------------
+# SPSA
+# ---------------------------------------------------------------------------
+@dataclass
+class SPSAState:
+    x: np.ndarray
+    f: float
+    k: int = 0                  # global iteration counter (gain schedule)
+    n_evals: int = 0
+    seed: int = 0
+
+    @property
+    def best_x(self) -> np.ndarray:
+        return self.x
+
+    @property
+    def best_f(self) -> float:
+        return float(self.f)
+
+
+def spsa_init(fn: Callable, x0: np.ndarray, *, seed: int = 0) -> SPSAState:
+    x0 = np.asarray(x0, np.float64)
+    return SPSAState(x0, float(fn(x0)), n_evals=1, seed=seed)
+
+
+def spsa_run(fn: Callable, state: SPSAState, maxiter: int, *,
+             a=0.2, c=0.15, A=10.0, alpha=0.602, gamma=0.101,
+             clip: float = 1.0) -> SPSAState:
+    rng = np.random.default_rng(state.seed + state.k)
+    x, fbest, k, evals = state.x.copy(), state.f, state.k, 0
+    for _ in range(max(0, int(maxiter))):
+        ak = a / (k + 1 + A) ** alpha
+        ck = c / (k + 1) ** gamma
+        delta = rng.choice([-1.0, 1.0], size=x.shape)
+        fp = float(fn(x + ck * delta))
+        fm = float(fn(x - ck * delta))
+        evals += 2
+        ghat = (fp - fm) / (2 * ck) * (1.0 / delta)
+        gn = float(np.linalg.norm(ghat))
+        if clip and gn > clip:          # norm-clip: stabilizes rough
+            ghat = ghat * (clip / gn)   # quantum loss landscapes
+        cand = x - ak * ghat
+        fc = float(fn(cand)); evals += 1
+        if fc <= fbest + abs(fbest) * 0.1 + 1e-3:   # blocking step
+            x, fbest = cand, min(fbest, fc)
+        k += 1
+    return SPSAState(x, float(fn(x)), k, state.n_evals + evals + 1,
+                     state.seed)
+
+
+# ---------------------------------------------------------------------------
+# unified resumable facade (what core/ uses)
+# ---------------------------------------------------------------------------
+class GradFreeOptimizer:
+    """Resumable metered optimizer.  ``run(maxiter)`` advances the state;
+    the controller owns the budget (the paper's regulation law)."""
+
+    def __init__(self, fn: Callable, x0, *, method: str = "nelder-mead",
+                 seed: int = 0):
+        self.fn = fn
+        self.method = method
+        if method == "nelder-mead":
+            self.state = nm_init(fn, np.asarray(x0))
+        elif method == "spsa":
+            self.state = spsa_init(fn, np.asarray(x0), seed=seed)
+        else:
+            raise ValueError(method)
+
+    def run(self, maxiter: int) -> Tuple[np.ndarray, float]:
+        if self.method == "nelder-mead":
+            self.state = nm_run(self.fn, self.state, maxiter)
+        else:
+            self.state = spsa_run(self.fn, self.state, maxiter)
+        return self.state.best_x, self.state.best_f
+
+    def set_fn(self, fn: Callable):
+        """Swap the objective (e.g. distillation weight changed) without
+        resetting optimizer geometry."""
+        self.fn = fn
+        if self.method == "nelder-mead":
+            st = self.state
+            fvals = np.array([float(fn(s)) for s in st.simplex])
+            self.state = NMState(st.simplex, fvals, st.n_evals + len(fvals),
+                                 st.n_iters)
+        else:
+            st = self.state
+            self.state = replace(st, f=float(fn(st.x)),
+                                 n_evals=st.n_evals + 1)
+
+    @property
+    def n_evals(self) -> int:
+        return self.state.n_evals
+
+    @property
+    def best(self) -> Tuple[np.ndarray, float]:
+        return self.state.best_x, self.state.best_f

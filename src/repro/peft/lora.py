@@ -1,0 +1,151 @@
+"""LoRA / QLoRA parameter-efficient fine-tuning (Hu et al. 2021; paper §II-A).
+
+Adapters attach to 2-D weights whose leaf name is in ``cfg.lora.targets``
+(attention + dense projections — matching the paper: "LoRA decomposes large
+matrices into low-rank components within attention layers").  Expert tensors
+(3-D) never get adapters; MoE fine-tuning goes through attention + shared
+experts, which is the standard PEFT-on-MoE recipe.
+
+QLoRA: base weights are blockwise int4-quantized (``quantize``/
+``dequantize``); the Pallas kernel ``repro.kernels.int4_matmul`` consumes the
+packed representation directly on TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# adapter init / merge
+# ---------------------------------------------------------------------------
+def init_layer_adapters(key, cfg, layer_params: Dict) -> Dict:
+    """Adapters for one (unstacked) layer param dict."""
+    out = {}
+    names = [n for n, p in sorted(layer_params.items())
+             if n in cfg.lora.targets and getattr(p, "ndim", 0) == 2]
+    packed = [n[:-3] for n, p in sorted(layer_params.items())
+              if n.endswith("__q") and n[:-3] in cfg.lora.targets]
+    names = sorted(set(names) | set(packed))
+    if not names:
+        return out
+    keys = jax.random.split(key, len(names))
+    for k, n in zip(keys, names):
+        if n in layer_params:
+            d_in, d_out = layer_params[n].shape
+        else:                         # QLoRA-packed: out dim halved
+            d_in, half = layer_params[f"{n}__q"].shape
+            d_out = half * 2
+        r = cfg.lora.rank
+        out[f"{n}_lora_a"] = (jax.random.normal(k, (d_in, r), jnp.float32)
+                              / jnp.sqrt(d_in))
+        out[f"{n}_lora_b"] = jnp.zeros((r, d_out), jnp.float32)
+    return out
+
+
+def merge_layer(cfg, layer_params: Dict, adapters: Dict) -> Dict:
+    """Fold adapters into base weights (inference deployment path)."""
+    merged = dict(layer_params)
+    scale = cfg.lora.alpha / cfg.lora.rank
+    for n in list(layer_params):
+        a = adapters.get(f"{n}_lora_a")
+        if a is None:
+            continue
+        b = adapters[f"{n}_lora_b"]
+        w = layer_params[n].astype(jnp.float32) + scale * (a @ b)
+        merged[n] = w.astype(layer_params[n].dtype)
+    return merged
+
+
+def adapter_param_count(adapters) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(adapters))
+
+
+# ---------------------------------------------------------------------------
+# QLoRA int4 blockwise quantization
+# ---------------------------------------------------------------------------
+QBLOCK = 64
+
+
+def quantize(w: jnp.ndarray, block: int = QBLOCK
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise absmax int4.  w: (in, out) → packed (in, out//2) uint8 +
+    scales (in, out//block) f32.  Values in [-7, 7]."""
+    d_in, d_out = w.shape
+    assert d_out % block == 0 and block % 2 == 0
+    wb = w.astype(jnp.float32).reshape(d_in, d_out // block, block)
+    scales = jnp.max(jnp.abs(wb), axis=-1, keepdims=True) / 7.0
+    scales = jnp.maximum(scales, 1e-12)
+    q = jnp.clip(jnp.round(wb / scales), -7, 7).astype(jnp.int8)
+    q = q.reshape(d_in, d_out)
+    lo = (q[:, 0::2] + 8).astype(jnp.uint8)
+    hi = (q[:, 1::2] + 8).astype(jnp.uint8)
+    packed = lo | (hi << 4)
+    return packed, scales[..., 0]
+
+
+def dequantize(packed: jnp.ndarray, scales: jnp.ndarray,
+               block: int = QBLOCK, dtype=jnp.bfloat16) -> jnp.ndarray:
+    d_in, half = packed.shape
+    d_out = half * 2
+    lo = (packed & 0xF).astype(jnp.int32) - 8
+    hi = (packed >> 4).astype(jnp.int32) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(d_in, d_out).astype(jnp.float32)
+    w = (q.reshape(d_in, d_out // block, block)
+         * scales[..., None]).reshape(d_in, d_out)
+    return w.astype(dtype)
+
+
+def quantize_layer_flat(layer: dict, targets, block: int = QBLOCK) -> dict:
+    """QLoRA a layer param dict IN FLAT FORM: each 2-D target weight ``w``
+    is replaced by ``w__q`` (packed int4) + ``w__s`` (scales).  Flat names
+    keep the sharding rules name-addressable (sharding._leaf_spec)."""
+    out = {}
+    for k, v in layer.items():
+        if k in targets and getattr(v, "ndim", 0) == 2 \
+                and v.shape[1] % block == 0:
+            q, s = quantize(v, block)
+            out[f"{k}__q"] = q
+            out[f"{k}__s"] = s
+        else:
+            out[k] = v
+    return out
+
+
+def quantize_stacked_groups(params: dict, targets,
+                            block: int = QBLOCK) -> dict:
+    """Apply quantize_layer_flat across the stacked group structure
+    (params['groups'] / ['enc_groups']: tuples of dicts of (G, ...) arrays)
+    — vmapped so the leading group axis is preserved."""
+    def one_stack(stack):
+        return jax.vmap(
+            lambda lyr: quantize_layer_flat(lyr, targets, block))(stack)
+
+    out = dict(params)
+    for gk in ("groups", "enc_groups"):
+        if gk in params:
+            out[gk] = tuple(one_stack(g) for g in params[gk])
+    return out
+
+
+def quantize_tree(params, targets, block: int = QBLOCK):
+    """Quantize all matching 2-D leaves; returns (qtree, meta) where qtree
+    stores {'q': packed, 's': scales} in place of the weight."""
+    def walk(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, (dict, tuple, list)):
+                    out[k] = walk(v)
+                elif k in targets and v.ndim == 2:
+                    q, s = quantize(v, block)
+                    out[k] = {"q": q, "s": s}
+                else:
+                    out[k] = v
+            return out
+        if isinstance(tree, (tuple, list)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+    return walk(params)

@@ -1,0 +1,1 @@
+from repro.quantum import backends, circuits, qnn, statevector  # noqa: F401

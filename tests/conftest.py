@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run forces 512 in
+# its own process only).  Keep XLA quiet and single-threaded-ish on CI.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

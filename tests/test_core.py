@@ -1,0 +1,158 @@
+"""Core LLM-QFL: regulation law, selection, termination, distillation,
+and the full Algorithm-1 integration (QFL vs LLM-QFL)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distill, regulation, selection
+from repro.core.termination import TerminationCriterion
+from repro.core.orchestrator import RunConfig, run_experiment
+from repro.data.tasks import build_task
+
+
+# --- regulation ---------------------------------------------------------------
+def test_regulate_adaptive_is_ratio():
+    # QNN behind the LLM by 2×: maxiter doubles (ratio·maxiter), capped
+    assert regulation.regulate(10, 2.0, 1.0, variant="adaptive") == 20
+    assert regulation.regulate(80, 2.0, 1.0, variant="adaptive",
+                               cap=100) == 100
+
+
+def test_regulate_noop_when_ahead():
+    # Alg. 1 line 12: only boost when LLM_l < QNN_l
+    for v in regulation.VARIANTS:
+        assert regulation.regulate(10, 0.5, 1.0, variant=v) == 10
+
+
+@given(st.integers(1, 80), st.floats(0.01, 10.0), st.floats(0.01, 10.0))
+@settings(max_examples=60, deadline=None)
+def test_regulate_monotone_in_ratio(maxiter, qnn_l, llm_l):
+    """Regulated maxiter is monotone non-decreasing in the loss ratio."""
+    for v in regulation.VARIANTS:
+        lo = regulation.regulate(maxiter, qnn_l, llm_l, variant=v)
+        hi = regulation.regulate(maxiter, qnn_l * 1.5, llm_l, variant=v)
+        assert hi >= lo
+        assert 1 <= lo <= 100 and 1 <= hi <= 100
+
+
+def test_regulate_variants_distinct():
+    vals = {v: regulation.regulate(10, 3.0, 1.0, variant=v)
+            for v in regulation.VARIANTS}
+    assert vals["adaptive"] == 30
+    assert vals["incremental"] == 16          # 10 + 2·3
+    assert vals["logarithmic"] == 21          # 10·(1+ln3)
+    assert vals["dynamic"] == 20              # 0.5·10 + 0.5·30
+
+
+# --- selection -------------------------------------------------------------------
+def test_select_aligned_picks_closest():
+    losses = [0.5, 0.9, 0.52, 1.5]
+    sel = selection.select_aligned(losses, 0.5, 0.5)
+    assert sel == [0, 2]
+
+
+def test_select_always_nonempty():
+    assert selection.select_aligned([1.0], 0.0, 0.01) == [0]
+
+
+@given(st.lists(st.floats(0.0, 5.0), min_size=3, max_size=20),
+       st.floats(0.0, 5.0), st.floats(0.1, 0.9))
+@settings(max_examples=60, deadline=None)
+def test_selection_variance_reduction(losses, server, frac):
+    """Cor. VI.8.2: Var over the aligned subset ≤ Var over all."""
+    sel = selection.select_aligned(losses, server, frac)
+    v = selection.selection_variance(losses, server, sel)
+    assert v["var_selected"] <= v["var_all"] + 1e-12
+
+
+# --- termination ------------------------------------------------------------------
+def test_termination_on_plateau():
+    t = TerminationCriterion(epsilon=1e-2, t_max=100)
+    assert not t.update(1.0, 1)
+    assert not t.update(0.5, 2)
+    assert t.update(0.4999, 3)          # rel. improvement 2e-4 < 1e-2
+
+
+def test_termination_tmax():
+    t = TerminationCriterion(epsilon=1e-9, t_max=3)
+    assert not t.update(3.0, 1)
+    assert not t.update(2.0, 2)
+    assert t.update(1.0, 3)
+
+
+# --- distillation -------------------------------------------------------------------
+def test_kl_zero_iff_equal():
+    p = jnp.array([[0.3, 0.7], [0.9, 0.1]])
+    assert float(distill.kl_divergence(p, p)) == pytest.approx(0.0, abs=1e-6)
+    q = jnp.array([[0.7, 0.3], [0.1, 0.9]])
+    assert float(distill.kl_divergence(p, q)) > 0.1
+
+
+def test_client_objective_composition():
+    """objective = F + λ·KL + µ·prox: each term contributes."""
+    fwd = lambda th, X: jnp.tile(jax.nn.softmax(th[:2])[None], (X.shape[0], 1))
+    base = lambda th: jnp.sum(th ** 2)
+    X = jnp.zeros((4, 4))
+    teacher = jnp.tile(jnp.array([[0.9, 0.1]]), (4, 1))
+    tg = np.array([1.0, 1.0])
+    obj = distill.make_client_objective(base, fwd, X, teacher, tg,
+                                        lam=1.0, mu=1.0)
+    th = np.array([0.0, 0.0])
+    val = obj(th)
+    # base=0, KL(0.9/0.1‖0.5/0.5)>0, prox=mean((0-1)^2)=1
+    assert val > 1.0
+
+
+# --- integration: Algorithm 1 -------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_task():
+    return build_task("genomic", n_clients=3, train_size=90, test_size=45,
+                      val_size=30, seed=5)
+
+
+def test_qfl_baseline_runs(small_task):
+    res = run_experiment(small_task, method="qfl", n_rounds=3, maxiter0=5,
+                         early_stop=False)
+    assert len(res.rounds) == 3
+    # plain QFL never regulates
+    for r in res.rounds:
+        assert r.maxiters == [5, 5, 5]
+        assert r.selected == [0, 1, 2]
+    assert all(np.isfinite(r.server_loss) for r in res.rounds)
+
+
+def test_llm_qfl_regulates_and_improves(small_task):
+    res = run_experiment(small_task, method="llm-qfl", n_rounds=4,
+                         maxiter0=5, llm_steps=10, early_stop=False, seed=2)
+    assert res.llm_losses and all(np.isfinite(l) for l in res.llm_losses)
+    # regulation must have engaged for at least one device after round 1
+    assert any(m != 5 for r in res.rounds[1:] for m in r.maxiters)
+    # loss should not blow up; final ≤ first (stochastic but reliable here)
+    assert res.rounds[-1].server_loss <= res.rounds[0].server_loss * 1.5
+
+
+def test_llm_qfl_selected_subsets(small_task):
+    res = run_experiment(small_task, method="llm-qfl", select_frac=0.34,
+                         n_rounds=3, maxiter0=5, llm_steps=8,
+                         early_stop=False)
+    for r in res.rounds:
+        assert len(r.selected) == 1
+        assert r.var_selected <= r.var_all + 1e-12
+
+
+def test_early_termination_short_circuits(small_task):
+    res = run_experiment(small_task, method="llm-qfl", n_rounds=50,
+                         maxiter0=5, llm_steps=8, epsilon=0.9)
+    assert len(res.rounds) < 50
+    assert res.terminated_early
+
+
+def test_tweets_qcnn_path():
+    task = build_task("tweets", n_clients=3, train_size=90, test_size=30,
+                      val_size=30, seed=7)
+    res = run_experiment(task, method="llm-qfl", n_rounds=2, maxiter0=4,
+                         llm_steps=8, early_stop=False)
+    assert len(res.rounds) == 2
+    assert np.isfinite(res.rounds[-1].server_loss)

@@ -1,0 +1,98 @@
+"""Data pipelines: generators, tokenizers, PCA, federated splits."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import federated, genomic, pca, tokenizer, tweets
+from repro.data.tasks import build_task
+
+
+def test_genomic_shapes_and_learnability():
+    seqs, labels = genomic.generate(400, seed=1)
+    assert seqs.shape == (400, 200) and set(np.unique(labels)) <= {0, 1}
+    assert seqs.min() >= 0 and seqs.max() <= 3
+    # GC content separates classes (planted signal)
+    gc = ((seqs == 1) | (seqs == 2)).mean(axis=1)
+    assert gc[labels == 0].mean() > gc[labels == 1].mean()
+
+
+def test_genomic_onehot_roundtrip():
+    seqs, _ = genomic.generate(10, seed=2)
+    oh = genomic.one_hot(seqs)
+    assert oh.shape == (10, 800)
+    np.testing.assert_allclose(oh.reshape(10, 200, 4).sum(-1), 1.0)
+    assert np.argmax(oh.reshape(10, 200, 4), -1).astype(np.int8).tolist() \
+        == seqs.tolist()
+
+
+def test_tweets_generator():
+    texts, labels = tweets.generate(300, seed=3)
+    assert len(texts) == 300 and set(np.unique(labels)) <= {0, 1, 2}
+    f = tweets.bag_features(texts)
+    # positive tweets carry more positive words
+    assert f[labels == 2, 0].mean() > f[labels == 0, 0].mean()
+    assert f[labels == 0, 1].mean() > f[labels == 2, 1].mean()
+
+
+def test_kmer_tokenizer():
+    tok = tokenizer.KmerTokenizer(k=6, n_labels=2)
+    assert tok.vocab_size == 4 + 4096 + 2
+    ids = tok.encode("ACGTAC" * 5)
+    assert ids[0] == tokenizer.BOS and len(ids) == 1 + 5
+    assert tok.label_token(0) == tok.vocab_size - 2
+    assert tok.label_token(1) == tok.vocab_size - 1
+
+
+def test_pack_classification_masks():
+    tok = tokenizer.KmerTokenizer(k=6, n_labels=2)
+    lists = [tok.encode("ACGTAC" * 4), tok.encode("ACGTAC" * 2)]
+    batch = tokenizer.pack_classification(lists, np.array([1, 0]), tok, 16)
+    ys = batch["labels"]
+    assert (ys >= 0).sum(axis=1).tolist() == [1, 1]     # one label pos each
+    pos = np.argmax(ys >= 0, axis=1)
+    assert ys[0, pos[0]] == tok.label_token(1)
+    # teacher-forced label token present in the input stream
+    assert batch["tokens"][0, pos[0] + 1] == tok.label_token(1)
+
+
+def test_pca_projects_to_pi_box():
+    X = np.random.default_rng(0).normal(size=(300, 50)).astype(np.float32)
+    p = pca.fit(X, 4)
+    Z = p.transform(X)
+    assert Z.shape == (300, 4)
+    assert Z.min() >= 0.0 and Z.max() <= np.pi + 1e-6
+
+
+def test_pca_orthonormal_components():
+    X = np.random.default_rng(1).normal(size=(200, 30))
+    p = pca.fit(X, 4, scale_to_pi=False)
+    gram = p.components.T @ p.components
+    np.testing.assert_allclose(gram, np.eye(4), atol=1e-8)
+
+
+@given(st.integers(2, 12), st.floats(0.1, 5.0))
+@settings(max_examples=20, deadline=None)
+def test_dirichlet_split_partitions(n_clients, alpha):
+    labels = np.random.default_rng(0).integers(0, 3, 400)
+    shards = federated.split_dirichlet(labels, n_clients, alpha=alpha,
+                                       seed=1)
+    allidx = np.concatenate(shards)
+    assert len(allidx) == 400 and len(np.unique(allidx)) == 400
+    assert min(len(s) for s in shards) >= 8
+
+
+def test_client_weights_sum_to_one():
+    shards = [np.arange(10), np.arange(30), np.arange(60)]
+    w = federated.client_weights(shards)
+    assert w.sum() == pytest.approx(1.0)
+    np.testing.assert_allclose(w, [0.1, 0.3, 0.6])
+
+
+def test_build_task_end_to_end():
+    t = build_task("genomic", n_clients=4, train_size=200, test_size=50,
+                   val_size=25, non_iid_alpha=0.5, seed=9)
+    assert t.n_clients == 4 and sum(c.n for c in t.clients) == 200
+    assert t.test_qX.shape == (50, 4) and t.val_qX.shape == (25, 4)
+    assert t.weights.sum() == pytest.approx(1.0)
+    for c in t.clients:
+        assert c.llm_batch["tokens"].shape[1] == t.llm_seq_len

@@ -1,0 +1,63 @@
+"""Gradient-free optimizers: maxiter semantics, resumability, convergence."""
+import numpy as np
+import pytest
+
+from repro.optim.gradfree import (GradFreeOptimizer, nm_init, nm_run,
+                                  spsa_init, spsa_run)
+
+
+def quad(x):
+    return float(np.sum((x - 1.0) ** 2))
+
+
+def test_nm_converges_quadratic():
+    opt = GradFreeOptimizer(quad, np.zeros(4))
+    _, f = opt.run(150)
+    assert f < 1e-6
+
+
+def test_nm_maxiter_metering():
+    st0 = nm_init(quad, np.zeros(3))
+    st1 = nm_run(quad, st0, 10)
+    assert st1.n_iters == 10
+    st2 = nm_run(quad, st1, 7)
+    assert st2.n_iters == 17
+    assert st2.best_f <= st1.best_f            # monotone best
+
+
+def test_nm_zero_iters_is_noop():
+    st0 = nm_init(quad, np.zeros(3))
+    st1 = nm_run(quad, st0, 0)
+    assert st1.best_f == st0.best_f and st1.n_evals == st0.n_evals
+
+
+def test_nm_resumable_equals_oneshot():
+    one = nm_run(quad, nm_init(quad, np.zeros(3)), 30)
+    two = nm_run(quad, nm_run(quad, nm_init(quad, np.zeros(3)), 15), 15)
+    np.testing.assert_allclose(one.best_x, two.best_x, atol=1e-12)
+
+
+def test_spsa_improves_and_resumes():
+    opt = GradFreeOptimizer(quad, np.zeros(6), method="spsa", seed=1)
+    f0 = opt.best[1]
+    _, f1 = opt.run(150)
+    assert f1 < f0
+    _, f2 = opt.run(150)
+    assert f2 <= f1 + 1e-9
+
+
+def test_rosenbrock_both_methods_bounded():
+    rosen = lambda x: float((1 - x[0]) ** 2 + 100 * (x[1] - x[0] ** 2) ** 2)
+    for m in ("nelder-mead", "spsa"):
+        opt = GradFreeOptimizer(rosen, np.array([-1.2, 1.0]), method=m)
+        _, f = opt.run(250)
+        assert np.isfinite(f) and f < rosen(np.array([-1.2, 1.0]))
+
+
+def test_set_fn_keeps_geometry():
+    opt = GradFreeOptimizer(quad, np.zeros(3))
+    opt.run(20)
+    shifted = lambda x: float(np.sum((x - 2.0) ** 2))
+    opt.set_fn(shifted)
+    x, f = opt.run(100)
+    assert f < 1e-3 and np.allclose(x, 2.0, atol=0.05)

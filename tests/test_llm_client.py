@@ -1,0 +1,68 @@
+"""LLM client: fine-tuning learns, teacher probs are calibrated,
+adapter FedAvg/distillation behave."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.llm_client import (LLMClient, distill_to_global,
+                                   fedavg_adapters, task_llm_config)
+from repro.data.tasks import build_task
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def task():
+    return build_task("genomic", n_clients=2, train_size=80, test_size=20,
+                      val_size=20, seed=3)
+
+
+@pytest.fixture(scope="module")
+def clients(task):
+    cfg = task_llm_config("tiny-llm", task.vocab_size, task.llm_seq_len)
+    key = jax.random.PRNGKey(0)
+    base = M.init_params(cfg, key, dtype=jnp.float32)
+    out = []
+    for i in range(task.n_clients):
+        cl = LLMClient(cfg, base, jax.random.PRNGKey(i + 1),
+                       n_labels=task.n_classes)
+        out.append(cl)
+    return out
+
+
+def test_fine_tune_reduces_loss(task, clients):
+    cl = clients[0]
+    batch = task.clients[0].llm_batch
+    before = cl.eval_loss(batch)
+    cl.fine_tune(batch, steps=25)
+    after = cl.eval_loss(batch)
+    assert after < before
+
+
+def test_teacher_probs_shape_simplex(task, clients):
+    batch = task.clients[0].llm_batch
+    p = clients[0].teacher_probs(batch)
+    assert p.shape == (task.clients[0].n, task.n_classes)
+    np.testing.assert_allclose(np.asarray(p.sum(1)), 1.0, atol=1e-5)
+
+
+def test_f1_in_unit_interval(task, clients):
+    f1 = clients[0].f1(task.clients[0].llm_batch)
+    assert 0.0 <= f1 <= 1.0
+
+
+def test_fedavg_adapters_weighted_mean():
+    a = {"x": jnp.ones((2, 2))}
+    b = {"x": jnp.zeros((2, 2))}
+    avg = fedavg_adapters([a, b], [3.0, 1.0])
+    np.testing.assert_allclose(np.asarray(avg["x"]), 0.75)
+
+
+def test_distill_to_global_blends(task, clients):
+    before = [jax.tree.leaves(c.adapters)[0].copy() for c in clients]
+    distill_to_global(clients, task.weights[: len(clients)], rho=0.5)
+    after = [jax.tree.leaves(c.adapters)[0] for c in clients]
+    # clients move toward each other
+    d_before = float(jnp.abs(before[0] - before[1]).mean())
+    d_after = float(jnp.abs(after[0] - after[1]).mean())
+    assert d_after <= d_before + 1e-9

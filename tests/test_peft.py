@@ -1,0 +1,76 @@
+"""PEFT: LoRA merge equivalence, QLoRA quantization error bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get
+from repro.models import model as M
+from repro.models.common import dense, lora_pair
+from repro.peft import lora
+
+KEY = jax.random.PRNGKey(11)
+
+
+def test_lora_merge_equivalence():
+    """merged-weights forward ≡ adapter-path forward (property from
+    DESIGN.md §8)."""
+    cfg = get("stablelm-3b-smoke")
+    p = M.init_params(cfg, KEY)
+    a = M.init_adapters(cfg, KEY, p)
+    # give the b-matrices real values (init is zeros)
+    a = jax.tree.map(lambda x: x + 0.01, a)
+
+    layer0 = jax.tree.map(lambda x: x[0], p["groups"][0])
+    adp0 = jax.tree.map(lambda x: x[0], a["groups"][0])
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model), jnp.float32)
+
+    combined = {**layer0, **adp0}
+    y_adapter = dense(x, layer0["wq"], lora_pair(combined, "wq", cfg.lora))
+    merged = lora.merge_layer(cfg, layer0, adp0)
+    y_merged = dense(x, merged["wq"].astype(jnp.float32))
+    # merged path re-quantizes to the base dtype (bf16): one half-ulp of
+    # bf16 at activation scale ~2 is ~8e-3
+    np.testing.assert_allclose(np.asarray(y_adapter), np.asarray(y_merged),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_adapter_count_is_small():
+    cfg = get("llama3-405b-smoke")
+    p = M.init_params(cfg, KEY)
+    a = M.init_adapters(cfg, KEY, p)
+    n_base = sum(int(jnp.size(x)) for x in jax.tree.leaves(p))
+    n_adp = lora.adapter_param_count(a)
+    assert n_adp < 0.2 * n_base
+
+
+@given(st.integers(1, 4), st.floats(0.01, 2.0))
+@settings(max_examples=15, deadline=None)
+def test_quantize_dequantize_error_bound(seed, scale):
+    """Blockwise int4 absmax: |w − deq(q(w))| ≤ absmax/7/2 per block."""
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (32, 128), jnp.float32) * scale
+    packed, scales = lora.quantize(w, 64)
+    deq = lora.dequantize(packed, scales, 64, dtype=jnp.float32)
+    wb = np.asarray(w).reshape(32, 2, 64)
+    bound = np.abs(wb).max(-1) / 7.0 / 2.0 + 1e-6
+    err = np.abs(np.asarray(deq).reshape(32, 2, 64) - wb).max(-1)
+    assert (err <= bound + 1e-5).all()
+
+
+def test_quantize_pack_shapes():
+    w = jax.random.normal(KEY, (16, 256), jnp.float32)
+    packed, scales = lora.quantize(w, 64)
+    assert packed.shape == (16, 128) and packed.dtype == jnp.uint8
+    assert scales.shape == (16, 4)
+
+
+def test_quantize_tree_targets_only():
+    tree = {"wq": jnp.ones((8, 64)), "ln": jnp.ones((8,)),
+            "nested": {"w_in": jnp.ones((8, 64)), "bias": jnp.ones((64,))}}
+    qt = lora.quantize_tree(tree, targets=("wq", "w_in"))
+    assert set(qt["wq"].keys()) == {"q", "s"}
+    assert set(qt["nested"]["w_in"].keys()) == {"q", "s"}
+    assert qt["ln"].shape == (8,)
+    assert qt["nested"]["bias"].shape == (64,)

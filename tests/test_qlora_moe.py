@@ -1,0 +1,91 @@
+"""QLoRA-quantized model path + sort-based MoE dispatch invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get
+from repro.models import model as M
+from repro.peft import lora
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qcfg(name):
+    cfg = get(name + "-smoke")
+    return cfg, dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, quantize_base=True))
+
+
+def test_quantized_params_structure():
+    cfg, qcfg = _qcfg("stablelm-3b")
+    pq = M.init_params(qcfg, KEY)
+    layer = pq["groups"][0]
+    for t in ("wq", "wkv", "wo", "w_in", "w_out"):
+        assert f"{t}__q" in layer and f"{t}__s" in layer
+        assert t not in layer
+        assert layer[f"{t}__q"].dtype == jnp.uint8
+
+
+def test_quantized_forward_close_to_full():
+    cfg, qcfg = _qcfg("stablelm-3b")
+    p = M.init_params(cfg, KEY)
+    pq = M.init_params(qcfg, KEY)
+    a = M.init_adapters(cfg, KEY, p)
+    aq = M.init_adapters(qcfg, KEY, pq)
+    assert jax.tree.structure(a) == jax.tree.structure(aq)
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32)}
+    h, _, _ = M.forward(cfg, p, a, batch)
+    hq, _, _ = M.forward(qcfg, pq, aq, batch)
+    # int4 from-scratch weights: loose bound, but same scale & finite
+    assert bool(jnp.isfinite(hq.astype(jnp.float32)).all())
+    r = float(jnp.abs(hq.astype(jnp.float32) - h.astype(jnp.float32)).mean()
+              / (jnp.abs(h.astype(jnp.float32)).mean() + 1e-6))
+    assert r < 0.5
+
+
+def test_quantized_train_step_runs():
+    _, qcfg = _qcfg("stablelm-3b")
+    from repro.optim import adamw
+    pq = M.init_params(qcfg, KEY)
+    aq = M.init_adapters(qcfg, KEY, pq)
+    st = adamw.init(aq)
+    step = jax.jit(M.make_train_step(qcfg, n_microbatches=1, lr=1e-3))
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32),
+             "labels": jnp.ones((2, 32), jnp.int32)}
+    a1, st1, m = step(pq, aq, st, batch)
+    assert np.isfinite(float(m["loss"])) and float(m["grad_norm"]) > 0
+
+
+def test_moe_sort_ranking_matches_cumsum():
+    """Sort-based position-in-expert ≡ the one-hot cumsum reference
+    (first-come-first-served per expert)."""
+    rng = np.random.default_rng(0)
+    E, TK = 7, 200
+    flat_e = jnp.asarray(rng.integers(0, E, TK))
+    # reference: cumsum over one-hot
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos_ref = jnp.cumsum(onehot, axis=0) - 1
+    pos_ref = jnp.take_along_axis(pos_ref, flat_e[:, None], axis=1)[:, 0]
+    # sort-based (ffn.moe logic)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_sorted = jnp.arange(TK) - starts[sorted_e]
+    pos = jnp.zeros((TK,), jnp.int32).at[order].set(pos_sorted)
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos_ref))
+
+
+@pytest.mark.parametrize("name", ["kimi-k2-1t-a32b", "jamba-1.5-large-398b"])
+def test_moe_forward_capacity_drop(name):
+    """MoE keeps ≤ capacity tokens per expert and stays finite."""
+    cfg = get(name + "-smoke")
+    p = M.init_params(cfg, KEY)
+    a = M.init_adapters(cfg, KEY, p)
+    batch = {"tokens": jax.random.randint(KEY, (2, 64), 4,
+                                          cfg.vocab_size - 4)}
+    h, bal, _ = M.forward(cfg, p, a, batch)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
+    assert float(bal) > 0      # balance loss well-defined

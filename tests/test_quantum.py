@@ -1,0 +1,145 @@
+"""Quantum substrate: statevector invariants, circuits, QNN, backends."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quantum import backends, circuits as C, qnn, statevector as sv
+
+KEY = jax.random.PRNGKey(3)
+
+
+# --- statevector engine -----------------------------------------------------
+def test_zero_state():
+    psi = sv.zero_state(3)
+    p = sv.probabilities(psi)
+    assert p[0] == pytest.approx(1.0)
+    assert float(sv.norm(psi)) == pytest.approx(1.0)
+
+
+@given(st.integers(2, 6), st.integers(0, 5),
+       st.floats(-3.0, 3.0, allow_nan=False))
+@settings(max_examples=25, deadline=None)
+def test_gates_preserve_norm(n, qi, theta):
+    q = qi % n
+    psi = sv.zero_state(n)
+    psi = sv.h(psi, q)
+    psi = sv.rx(psi, theta, q)
+    psi = sv.ry(psi, theta, (q + 1) % n)
+    psi = sv.rz(psi, theta, q)
+    psi = sv.cx(psi, q, (q + 1) % n)
+    psi = sv.cz(psi, q, (q + 1) % n)
+    assert float(sv.norm(psi)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_x_flips():
+    psi = sv.x(sv.zero_state(2), 0)
+    p = sv.probabilities(psi)           # big-endian: |10> = index 2
+    assert p[2] == pytest.approx(1.0)
+
+
+def test_cx_entangles():
+    psi = sv.h(sv.zero_state(2), 0)
+    psi = sv.cx(psi, 0, 1)              # Bell state
+    p = sv.probabilities(psi)
+    np.testing.assert_allclose(p, [0.5, 0, 0, 0.5], atol=1e-6)
+
+
+def test_expect_z():
+    psi = sv.zero_state(1)
+    assert float(sv.expect_z(psi, 0)) == pytest.approx(1.0)
+    psi = sv.x(psi, 0)
+    assert float(sv.expect_z(psi, 0)) == pytest.approx(-1.0)
+
+
+# --- circuits ----------------------------------------------------------------
+def test_feature_map_norm_and_sensitivity():
+    x1 = jnp.array([0.3, 1.2, 2.0, 0.7])
+    x2 = x1.at[0].add(0.5)
+    p1, p2 = C.zz_feature_map(x1), C.zz_feature_map(x2)
+    assert float(sv.norm(p1)) == pytest.approx(1.0, abs=1e-5)
+    assert float(jnp.abs(p1 - p2).max()) > 1e-3   # encodes the feature
+
+
+def test_real_amplitudes_param_count():
+    psi = sv.zero_state(4)
+    n = C.real_amplitudes_n_params(4, reps=3)
+    assert n == 16
+    theta = jnp.linspace(-1, 1, n)
+    out = C.real_amplitudes(psi, theta, reps=3)
+    assert float(sv.norm(out)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_qcnn_reduces_to_one_qubit():
+    psi = sv.zero_state(4)
+    n = C.qcnn_n_params(4)
+    psi, q = C.qcnn(psi, jnp.linspace(-2, 2, n))
+    assert 0 <= q < 4
+    assert float(sv.norm(psi)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_qcnn_param_count_formula():
+    assert C.qcnn_n_params(4) == 18    # stage1: 2 pairs ×6, stage2: 1 pair ×6
+    assert C.qcnn_n_params(8) == 42
+
+
+# --- QNN ----------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["vqc", "qcnn"])
+def test_qnn_probs_simplex(kind):
+    spec = qnn.QNNSpec(kind, n_qubits=4)
+    th = spec.init_params(KEY)
+    X = jax.random.uniform(KEY, (16, 4), jnp.float32, 0, np.pi)
+    p = qnn.make_forward(spec)(th, X)
+    assert p.shape == (16, 2)
+    np.testing.assert_allclose(np.asarray(p.sum(1)), 1.0, atol=1e-5)
+    assert (np.asarray(p) >= -1e-6).all()
+
+
+def test_parity_interpret():
+    # 2 qubits: parity of |00>=0, |01>=1, |10>=1, |11>=0
+    probs = jnp.array([[0.1, 0.2, 0.3, 0.4]])
+    out = qnn.parity_interpret(probs, 2, 2)
+    np.testing.assert_allclose(out[0], [0.5, 0.5], atol=1e-6)
+
+
+def test_qnn_trains():
+    spec = qnn.QNNSpec("vqc", n_qubits=4)
+    X = jax.random.uniform(KEY, (32, 4), jnp.float32, 0, np.pi)
+    y = (X[:, 0] > np.pi / 2).astype(jnp.int32)
+    loss = qnn.make_loss_fn(spec, X, y)
+    from repro.optim.gradfree import GradFreeOptimizer
+    th0 = np.asarray(spec.init_params(KEY))
+    f0 = float(loss(jnp.asarray(th0, jnp.float32)))
+    opt = GradFreeOptimizer(
+        lambda t: float(loss(jnp.asarray(t, jnp.float32))), th0)
+    _, f1 = opt.run(40)
+    assert f1 < f0
+
+
+# --- backends -------------------------------------------------------------------
+def test_backend_noise_keeps_simplex():
+    p = jnp.array([[0.9, 0.1], [0.2, 0.8]])
+    for b in backends.BACKENDS.values():
+        out = b.transform_probs(p, key=KEY)
+        np.testing.assert_allclose(np.asarray(out.sum(1)), 1.0, atol=1e-5)
+
+
+def test_shot_sampling_concentrates():
+    p = jnp.array([[0.75, 0.25]])
+    counts = backends.sample_counts(KEY, p, 1000)
+    assert abs(float(counts[0, 0]) / 1000 - 0.75) < 0.05
+
+
+def test_latency_ordering_matches_table1():
+    """Table I: Fake < AerSim < Real comm time."""
+    n = 100
+    t = [backends.get(k).eval_time(n) for k in ("fake", "aersim", "real")]
+    assert t[0] < t[1] < t[2]
+
+
+def test_depolarizing_pulls_to_uniform():
+    b = backends.Backend("x", depolarizing=1.0)
+    p = jnp.array([[1.0, 0.0]])
+    np.testing.assert_allclose(b.transform_probs(p)[0], [0.5, 0.5],
+                               atol=1e-6)
