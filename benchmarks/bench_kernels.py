@@ -18,8 +18,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))     # single warmup call (jit compile)
     t0 = time.perf_counter()
     for _ in range(n):
         jax.block_until_ready(fn(*args))

@@ -152,6 +152,14 @@ def batch_axes(axis_names) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in axis_names)
 
 
+def _scalar_axis(e):
+    """P(('data',)) and P('data') mean the same sharding but no longer
+    compare equal in jax — canonicalize 1-tuples to the bare axis name."""
+    if isinstance(e, (tuple, list)) and len(e) == 1:
+        return e[0]
+    return e
+
+
 def batch_specs(batch, axis_names, *, batch_sharded=True):
     """Spec tree for an input batch: leading dim over ('pod','data')."""
     ba = batch_axes(axis_names) if batch_sharded else ()
@@ -161,7 +169,7 @@ def batch_specs(batch, axis_names, *, batch_sharded=True):
             return P()
         if x.shape[0] == 1 or not ba:
             return P(*((None,) * x.ndim))
-        return P(ba, *((None,) * (x.ndim - 1)))
+        return P(_scalar_axis(ba), *((None,) * (x.ndim - 1)))
 
     return jax.tree.map(leaf, batch)
 
@@ -190,7 +198,7 @@ def cache_specs(cache, axis_names, batch: int, axis_sizes=None):
             gdim = 1
         if (batch > 1 and ba and x.ndim > gdim and dims[gdim] == batch
                 and divides(ba, batch)):
-            spec[gdim] = ba
+            spec[gdim] = _scalar_axis(ba)
         # shard the longest remaining axis on model if it's big & divisible
         rest = [(i, d) for i, d in enumerate(dims)
                 if i > gdim and d >= 1024 and divides(tp, d)]

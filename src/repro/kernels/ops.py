@@ -14,6 +14,7 @@ from repro.kernels import distill_kl as _kl
 from repro.kernels import flash_attention as _fa
 from repro.kernels import int4_matmul as _i4
 from repro.kernels import lora_matmul as _lm
+from repro.kernels import statevector_gates as _svg
 
 INTERPRET = jax.default_backend() == "cpu"
 
@@ -40,3 +41,11 @@ def distill_kl_mean(teacher_probs, student_logits, **kw):
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0, **kw):
     kw.setdefault("interpret", INTERPRET)
     return _fa.flash_attention(q, k, v, causal=causal, window=window, **kw)
+
+
+def statevector_gate(psi_re, psi_im, g_re, g_im, idx0, idx1, cmask, **kw):
+    # interpret-only for now: the kernel body's dynamic gather/scatter on
+    # idx0/idx1 does not lower through Mosaic yet (ROADMAP open item)
+    kw.setdefault("interpret", True)
+    return _svg.statevector_gate(psi_re, psi_im, g_re, g_im,
+                                 idx0, idx1, cmask, **kw)

@@ -31,6 +31,28 @@ def distill_kl(teacher_probs, student_logits, eps: float = 1e-9):
     return jnp.sum(pt * (jnp.log(pt) - logq), axis=-1)
 
 
+def statevector_gate(psi_re, psi_im, g_re, g_im, idx0, idx1, cmask):
+    """Batched controlled 2×2 gate on split-plane statevectors.
+
+    psi: (B, N) re/im planes; g: (B, 2, 2) re/im planes; idx0/idx1:
+    (N/2,) flat indices of the target-bit 0/1 amplitude pairs; cmask:
+    (N/2,) 1.0 where the gate acts.  Returns the new (re, im) planes.
+    """
+    a0 = psi_re[:, idx0].astype(jnp.float32) \
+        + 1j * psi_im[:, idx0].astype(jnp.float32)
+    a1 = psi_re[:, idx1].astype(jnp.float32) \
+        + 1j * psi_im[:, idx1].astype(jnp.float32)
+    g = g_re.astype(jnp.float32) + 1j * g_im.astype(jnp.float32)
+    n0 = g[:, 0, 0, None] * a0 + g[:, 0, 1, None] * a1
+    n1 = g[:, 1, 0, None] * a0 + g[:, 1, 1, None] * a1
+    m = cmask[None, :]
+    n0 = m * n0 + (1.0 - m) * a0
+    n1 = m * n1 + (1.0 - m) * a1
+    out_re = psi_re.at[:, idx0].set(n0.real).at[:, idx1].set(n1.real)
+    out_im = psi_im.at[:, idx0].set(n0.imag).at[:, idx1].set(n1.imag)
+    return out_re, out_im
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     scale: float = None):
     """Reference attention (B, H, S, D) with GQA-expanded k/v and optional

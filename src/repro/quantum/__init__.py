@@ -1,1 +1,1 @@
-from repro.quantum import backends, circuits, qnn, statevector  # noqa: F401
+from repro.quantum import backends, circuits, qnn, statevector, tape  # noqa: F401

@@ -7,6 +7,69 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# ---------------------------------------------------------------------------
+# hypothesis fallback: the property tests only use a tiny strategy subset
+# (integers / floats / lists).  When hypothesis is not installed, vendor a
+# deterministic stand-in that runs each property test on `max_examples`
+# seeded-random samples, so `pytest -x -q` stays green with no extra deps.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import functools
+    import random
+    import sys
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _floats(lo, hi, **_kw):
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _lists(elem, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [elem.example(rng) for _ in
+                                      range(rng.randint(min_size, max_size))])
+
+    def _sampled_from(seq):
+        return _Strategy(lambda rng: rng.choice(list(seq)))
+
+    def _settings(max_examples=20, **_kw):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def _given(*strategies):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(getattr(f, "_max_examples", 20)):
+                    drawn = [s.example(rng) for s in strategies]
+                    f(*args, *drawn, **kwargs)
+            # hide the wrapped signature or pytest treats the strategy
+            # parameters as fixtures to inject
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers, _st.floats = _integers, _floats
+    _st.lists, _st.sampled_from = _lists, _sampled_from
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given, _hyp.settings, _hyp.strategies = _given, _settings, _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None)
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,0 +1,132 @@
+"""Engine parity: batched (fused device program) vs sequential reference.
+
+The batched engine must reproduce the sequential trajectories — same
+perturbation draws, same update law, same regulation — up to f32/f64
+arithmetic-order noise, for native SPSA; the Nelder–Mead config maps its
+regulated budgets onto SPSA iteration masks and must stay well-behaved.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.orchestrator import run_experiment
+from repro.data.tasks import build_task
+from repro.optim import gradfree
+from repro.optim.batched_spsa import batched_spsa, make_deltas
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    return build_task("genomic", n_clients=3, train_size=90, test_size=45,
+                      val_size=30, seed=5)
+
+
+def _pair(task, **kw):
+    seq = run_experiment(task, engine="sequential", **kw)
+    bat = run_experiment(task, engine="batched", **kw)
+    return seq, bat
+
+
+# --- unit: masked batched SPSA vs the sequential scalar SPSA -----------------
+def test_batched_spsa_matches_sequential_per_client():
+    dim, iters = 6, np.array([7, 3, 0])
+    seeds = [101, 202, 303]
+    deltas = make_deltas(seeds, 8, dim)
+
+    def quad(c):
+        center = np.linspace(-1, 1, dim) * (c + 1)
+        return lambda x: float(np.sum((np.asarray(x) - center) ** 2))
+
+    x0 = np.full((3, dim), 0.5)
+    f = lambda xs: jnp.sum(
+        (xs - jnp.linspace(-1, 1, dim)[None, :]
+         * (jnp.arange(3, dtype=jnp.float32) + 1)[:, None]) ** 2, axis=-1)
+    x, f_final, n_evals = batched_spsa(f, x0, iters, deltas)
+
+    for c in range(3):
+        st = gradfree.spsa_init(quad(c), x0[c], seed=seeds[c])
+        st = gradfree.spsa_run(quad(c), st, int(iters[c]))
+        np.testing.assert_allclose(np.asarray(x[c]), st.x, atol=2e-5)
+        assert int(n_evals[c]) == st.n_evals
+
+    # zero-budget client never moves
+    np.testing.assert_allclose(np.asarray(x[2]), x0[2], atol=0)
+
+
+def test_make_deltas_matches_gradfree_draw_order():
+    """Same rng construction + per-iteration draw as gradfree.spsa_run."""
+    seed, m, dim = 42, 5, 4
+    want = []
+    rng = np.random.default_rng(seed)
+    for _ in range(m):
+        want.append(rng.choice([-1.0, 1.0], size=dim))
+    got = make_deltas([seed], m, dim)[0]
+    np.testing.assert_array_equal(got, np.stack(want))
+
+
+# --- integration: run_experiment trajectories --------------------------------
+def test_qfl_spsa_engine_parity(small_task):
+    kw = dict(method="qfl", optimizer="spsa", n_rounds=3, maxiter0=5,
+              early_stop=False)
+    seq, bat = _pair(small_task, **kw)
+    np.testing.assert_allclose(bat.series("server_loss"),
+                               seq.series("server_loss"), atol=1e-4)
+    np.testing.assert_allclose(bat.theta_g, seq.theta_g, atol=1e-4)
+    assert bat.series("maxiters") == seq.series("maxiters")
+    assert bat.series("cum_evals") == seq.series("cum_evals")
+    assert bat.series("selected") == seq.series("selected")
+
+
+def test_llm_qfl_spsa_engine_parity(small_task):
+    """Full Alg. 1: distillation objective + regulated budgets, batched."""
+    kw = dict(method="llm-qfl", optimizer="spsa", n_rounds=3, maxiter0=5,
+              llm_steps=8, early_stop=False, seed=2)
+    seq, bat = _pair(small_task, **kw)
+    # regulation consumed identical losses → identical integer budgets
+    assert bat.series("maxiters") == seq.series("maxiters")
+    assert bat.series("cum_evals") == seq.series("cum_evals")
+    np.testing.assert_allclose(bat.series("server_loss"),
+                               seq.series("server_loss"), atol=1e-4)
+    np.testing.assert_allclose(bat.theta_g, seq.theta_g, atol=1e-3)
+
+
+def test_qcnn_tweets_engine_parity():
+    """3-class tweets task exercises the QCNN tape + parity interpret."""
+    task = build_task("tweets", n_clients=3, train_size=60, test_size=24,
+                      val_size=24, seed=7)
+    seq, bat = _pair(task, method="qfl", optimizer="spsa", n_rounds=2,
+                     maxiter0=4, early_stop=False)
+    np.testing.assert_allclose(bat.series("server_loss"),
+                               seq.series("server_loss"), atol=1e-4)
+    np.testing.assert_allclose(bat.theta_g, seq.theta_g, atol=1e-4)
+    assert bat.series("cum_evals") == seq.series("cum_evals")
+
+
+def test_nelder_mead_budgets_map_onto_spsa_masks(small_task):
+    """optimizer="nelder-mead" + engine="batched": regulated budgets drive
+    SPSA iteration masks; run must regulate, converge, and account evals
+    as 3·maxiter + 2 per client per round."""
+    res = run_experiment(small_task, method="llm-qfl",
+                         optimizer="nelder-mead", engine="batched",
+                         n_rounds=3, maxiter0=5, llm_steps=8,
+                         early_stop=False, seed=2)
+    assert len(res.rounds) == 3
+    assert all(np.isfinite(r.server_loss) for r in res.rounds)
+    assert res.rounds[-1].server_loss <= res.rounds[0].server_loss * 1.5
+    assert any(m != 5 for r in res.rounds[1:] for m in r.maxiters)
+    expect = [3 * m + 2 for m in res.rounds[0].maxiters]
+    assert res.rounds[0].cum_evals == expect
+
+
+def test_batched_engine_comm_accounting(small_task):
+    """Latency model sees 3·maxiter+1 post-init evals, like sequential."""
+    seq, bat = _pair(small_task, method="qfl", optimizer="spsa",
+                     n_rounds=2, maxiter0=4, early_stop=False,
+                     backend="fake")
+    for rs, rb in zip(seq.rounds, bat.rounds):
+        assert rb.comm_time_s == pytest.approx(rs.comm_time_s, rel=1e-9)
+
+
+def test_unknown_engine_rejected(small_task):
+    with pytest.raises(ValueError):
+        run_experiment(small_task, engine="warp-drive", n_rounds=1)

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+# resolves to real hypothesis when installed, else the deterministic
+# vendored fallback conftest.py registers in sys.modules
 from hypothesis import given, settings, strategies as st
 
 from repro.core import distill, regulation, selection
