@@ -2,12 +2,14 @@
 
 Times ``run_experiment`` end-to-end for both engines on the same task and
 config (method="qfl" so the one-time LLM fine-tune does not dilute the
-round timing; optimizer="spsa" so both paths run the same update law) and
-emits per-round wall-times, the speedup, and the convergence gap — the
-acceptance gate is batched ≥5× sequential at matched convergence.
+round timing) and emits per-round wall-times, the speedup, and the
+convergence gap — the acceptance gate is batched ≥5× sequential at
+matched convergence.
 
-``--smoke`` shrinks the workload for CI; ``--engine X`` runs one engine
-only (for profiling).
+``--optimizer`` selects the update law both paths run: "spsa" or
+"nelder-mead" (the paper's default, batched via speculative simplex
+candidate evaluation).  ``--smoke`` shrinks the workload for CI;
+``--engine X`` runs one engine only (for profiling).
 """
 from __future__ import annotations
 
@@ -20,9 +22,10 @@ from benchmarks.common import emit, get_task
 from repro.core.orchestrator import run_experiment
 
 
-def _run(task, engine: str, *, rounds: int, maxiter: int):
+def _run(task, engine: str, *, rounds: int, maxiter: int,
+         optimizer: str = "spsa"):
     t0 = time.perf_counter()
-    res = run_experiment(task, method="qfl", optimizer="spsa",
+    res = run_experiment(task, method="qfl", optimizer=optimizer,
                          engine=engine, n_rounds=rounds, maxiter0=maxiter,
                          early_stop=False)
     wall = time.perf_counter() - t0
@@ -40,6 +43,8 @@ def main(argv=()):
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--engine", choices=["sequential", "batched", "both"],
                     default="both")
+    ap.add_argument("--optimizer", choices=["spsa", "nelder-mead"],
+                    default="spsa")
     args = ap.parse_args(list(argv))
 
     rounds = args.rounds or (2 if args.smoke else 3)
@@ -52,13 +57,15 @@ def main(argv=()):
     results = {}
     for engine in (("sequential", "batched") if args.engine == "both"
                    else (args.engine,)):
-        wall, res = _run(task, engine, rounds=rounds, maxiter=maxiter)
+        wall, res = _run(task, engine, rounds=rounds, maxiter=maxiter,
+                         optimizer=args.optimizer)
         results[engine] = (wall, res)
         rows.append({
             "name": f"{engine}_round_s",
             "value": f"{wall / rounds:.3f}",
-            "derived": (f"total={wall:.2f}s rounds={rounds} "
-                        f"maxiter={maxiter} clients={args.clients} "
+            "derived": (f"optimizer={args.optimizer} total={wall:.2f}s "
+                        f"rounds={rounds} maxiter={maxiter} "
+                        f"clients={args.clients} "
                         f"final_loss={res.rounds[-1].server_loss:.6f}")})
 
     if len(results) == 2:
@@ -76,7 +83,8 @@ def main(argv=()):
         # so a second run isolates steady-state round wall-time (the
         # sequential path has no warm state — it re-traces every round
         # by construction, which is precisely its bottleneck)
-        w_warm, _ = _run(task, "batched", rounds=rounds, maxiter=maxiter)
+        w_warm, _ = _run(task, "batched", rounds=rounds, maxiter=maxiter,
+                         optimizer=args.optimizer)
         rows.append({
             "name": "batched_warm_round_s",
             "value": f"{w_warm / rounds:.3f}",

@@ -8,7 +8,10 @@ a single compiled device program built from:
 
   - the circuit tape compiler (``repro.quantum.tape``): the client QNN as
     a ``lax.scan`` over fused batched gate kernels on flat statevectors,
-  - the device-resident masked SPSA (``repro.optim.batched_spsa``),
+  - a device-resident masked optimizer — batched SPSA
+    (``repro.optim.batched_spsa``) or batched Nelder–Mead
+    (``repro.optim.batched_nm``, the paper's default method run natively:
+    speculative (C, n+3, P) candidate batches + masked branch selection),
   - a vmapped per-client objective  F_i + λ·KL(teacher‖student) + µ·prox
     mirroring ``distill.make_client_objective`` term for term.
 
@@ -28,16 +31,17 @@ XLA happy) but contribute exactly nothing — a padded client objective
 equals its unpadded value.  Padded feature rows are all-zero, a valid
 circuit input, so no NaNs leak through ``log``.
 
-Per-client ``maxiter`` budgets become SPSA **iteration masks** (see
-``batched_spsa``): the round always compiles to the same shapes, budgets
-arrive as a traced ``(C,)`` array, and regulation never recompiles.  The
-compiled round program is cached module-wide keyed by the static config,
-so fresh engine instances (new runs, tests, benches) with the same task
-shape reuse it.
+Per-client ``maxiter`` budgets become **iteration masks** (see
+``batched_spsa`` / ``batched_nm``): the round always compiles to the same
+shapes, budgets arrive as a traced ``(C,)`` array, and regulation never
+recompiles.  The compiled round program is cached module-wide keyed by
+the static config, so fresh engine instances (new runs, tests, benches)
+with the same task shape reuse it.
 
-The sequential path remains the parity reference; the Nelder–Mead config
-maps its regulated budgets onto SPSA iteration masks when batched (the
-simplex method is inherently eval-order-sequential).
+The sequential path remains the parity reference for both optimizers:
+branch decisions, trajectories, and eval counts of the batched
+Nelder–Mead match ``gradfree.nm_run`` decision-for-decision
+(``tests/test_batched_nm.py`` / ``tests/test_batched_engine.py``).
 """
 from __future__ import annotations
 
@@ -47,14 +51,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.optim.batched_nm import batched_nm, best_point
 from repro.optim.batched_spsa import batched_spsa, make_deltas
 from repro.quantum import tape as tape_mod
 
 _ROUND_CACHE: Dict[tuple, object] = {}
 
 
-def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool):
-    """Jitted (qX, qy, mask, teacher, θ_g, iters, deltas) → (x, n_evals)."""
+def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool,
+                    optimizer: str = "spsa", max_iter: int = 100):
+    """Jitted local-phase program → (x (C,P), n_evals (C,)).
+
+    spsa        : (qX, qy, mask, teacher, θ_g, iters, deltas)
+    nelder-mead : (qX, qy, mask, teacher, θ_g, iters) — ``max_iter`` is a
+                  static bound (branch-record width), budgets stay traced.
+    """
     cq = tape_mod.compile_qnn(spec)
     eps = 1e-9
 
@@ -76,24 +87,43 @@ def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool):
 
     vobj = jax.vmap(client_objective, in_axes=(0, 0, 0, 0, 0, None))
 
-    @jax.jit
-    def round_fn(qX, qy, mask, teacher, theta_g, iters, deltas):
+    def prep(qX, qy, mask, teacher, theta_g):
+        """Shared per-round start stack + closed-over objective."""
         x0 = jnp.tile(theta_g[None, :], (qX.shape[0], 1))
 
         def f(xs):
             return vobj(xs, qX, qy, mask, teacher, theta_g)
 
-        x, _, n_evals = batched_spsa(f, x0, iters, deltas)
-        return x, n_evals
+        return x0, f
+
+    if optimizer == "nelder-mead":
+        @jax.jit
+        def round_fn(qX, qy, mask, teacher, theta_g, iters):
+            x0, f = prep(qX, qy, mask, teacher, theta_g)
+            simplex, fvals, n_evals, _ = batched_nm(f, x0, iters,
+                                                    int(max_iter))
+            x, _ = best_point(simplex, fvals)
+            return x, n_evals
+    elif optimizer == "spsa":
+        @jax.jit
+        def round_fn(qX, qy, mask, teacher, theta_g, iters, deltas):
+            x0, f = prep(qX, qy, mask, teacher, theta_g)
+            x, _, n_evals = batched_spsa(f, x0, iters, deltas)
+            return x, n_evals
+    else:
+        raise ValueError(f"unknown batched optimizer {optimizer!r}")
 
     return round_fn
 
 
-def get_round_fn(spec, backend, *, lam: float, mu: float, use_llm: bool):
-    key = (spec, backend, float(lam), float(mu), bool(use_llm))
+def get_round_fn(spec, backend, *, lam: float, mu: float, use_llm: bool,
+                 optimizer: str = "spsa", max_iter: int = 100):
+    # max_iter only shapes the NM branch record — keep SPSA keys stable
+    key = (spec, backend, float(lam), float(mu), bool(use_llm), optimizer,
+           int(max_iter) if optimizer == "nelder-mead" else None)
     if key not in _ROUND_CACHE:
         _ROUND_CACHE[key] = _build_round_fn(spec, backend, lam, mu,
-                                            use_llm)
+                                            use_llm, optimizer, max_iter)
     return _ROUND_CACHE[key]
 
 
@@ -102,7 +132,8 @@ class BatchedRoundEngine:
 
     def __init__(self, task, spec, backend, *, lam: float, mu: float,
                  use_llm: bool, teacher_probs: Optional[List] = None,
-                 seeds: Sequence[int] = (), max_iter: int = 100):
+                 seeds: Sequence[int] = (), max_iter: int = 100,
+                 optimizer: str = "spsa"):
         C = task.n_clients
         n_cls = task.n_classes
         b_max = max(cl.n for cl in task.clients)
@@ -120,10 +151,18 @@ class BatchedRoundEngine:
                                                np.float32)
         self._qX, self._qy = jnp.asarray(qX), jnp.asarray(qy)
         self._mask, self._teacher = jnp.asarray(mask), jnp.asarray(teacher)
-        self._deltas = jnp.asarray(
-            make_deltas(seeds, max_iter, spec.n_params), jnp.float32)
+        self._optimizer = optimizer
+        if optimizer == "spsa":
+            self._deltas = jnp.asarray(
+                make_deltas(seeds, max_iter, spec.n_params), jnp.float32)
+        else:
+            self._deltas = None        # NM is deterministic — no draws
+        # sequential-path evals spent before the metered run: spsa_init
+        # does 1, nm_init does n+1 (the initial simplex)
+        self.init_evals = 1 if optimizer == "spsa" else spec.n_params + 1
         self._round = get_round_fn(spec, backend, lam=lam, mu=mu,
-                                   use_llm=use_llm)
+                                   use_llm=use_llm, optimizer=optimizer,
+                                   max_iter=max_iter)
 
     def run_round(self, theta_g: np.ndarray, maxiters: Sequence[int]
                   ) -> Tuple[np.ndarray, np.ndarray]:
@@ -131,11 +170,13 @@ class BatchedRoundEngine:
 
         Returns (thetas (C, P) float64, n_evals (C,) int) — the trained
         per-client parameters and the sequential-equivalent evaluation
-        counts (1 init + 3 per iteration + 1 final) for comm accounting.
+        counts (``init_evals`` + the metered run's branch-dependent spend)
+        for comm accounting.
         """
-        x, n_evals = self._round(
-            self._qX, self._qy, self._mask, self._teacher,
-            jnp.asarray(theta_g, jnp.float32),
-            jnp.asarray(np.asarray(maxiters, np.int32)),
-            self._deltas)
+        args = [self._qX, self._qy, self._mask, self._teacher,
+                jnp.asarray(theta_g, jnp.float32),
+                jnp.asarray(np.asarray(maxiters, np.int32))]
+        if self._optimizer == "spsa":
+            args.append(self._deltas)
+        x, n_evals = self._round(*args)
         return np.asarray(x, np.float64), np.asarray(n_evals, np.int64)

@@ -46,6 +46,7 @@ class RunConfig:
     optimizer: str = "nelder-mead"     # | "spsa"
     engine: str = "sequential"         # | "batched" (one jitted round prog)
     backend: str = "exact"
+    n_qubits: int = 4                  # must match the task's feature dim
     llm_name: str = "tiny-llm"
     llm_steps: int = 30
     llm_lr: float = 3e-3
@@ -96,7 +97,13 @@ class Orchestrator:
         if rc.engine not in ("sequential", "batched"):
             raise ValueError(f"unknown engine {rc.engine!r}")
         kind = rc.qnn_kind or ("vqc" if task.n_classes == 2 else "qcnn")
-        self.spec = qnn.QNNSpec(kind, n_qubits=4, n_classes=task.n_classes)
+        feat_dim = int(task.clients[0].qX.shape[1])
+        if feat_dim != rc.n_qubits:
+            raise ValueError(
+                f"n_qubits={rc.n_qubits} but the task encodes "
+                f"{feat_dim}-dim features (build_task(n_features=...))")
+        self.spec = qnn.QNNSpec(kind, n_qubits=rc.n_qubits,
+                                n_classes=task.n_classes)
         self.backend = backend_mod.get(rc.backend)
         if rc.engine == "batched":
             # tape-compiled forward: same math (≤1e-6), compiles in a
@@ -172,21 +179,15 @@ class Orchestrator:
 
         if rc.engine == "batched":
             # Local phase as one device program: tape-compiled circuits,
-            # vmapped clients, masked SPSA budgets (NM budgets map onto
-            # SPSA iteration masks — see batched_engine docstring).
+            # vmapped clients, masked per-client budgets driving the
+            # native batched optimizer (SPSA or Nelder–Mead).
             from repro.core.batched_engine import BatchedRoundEngine
-            if rc.optimizer == "nelder-mead":
-                import warnings
-                warnings.warn(
-                    "engine='batched' runs SPSA on-device: the "
-                    "nelder-mead maxiter budgets are mapped onto SPSA "
-                    "iteration masks (use engine='sequential' for the "
-                    "simplex method itself)", stacklevel=2)
             self._engine = BatchedRoundEngine(
                 task, self.spec, self.backend, lam=rc.lam, mu=rc.mu,
                 use_llm=rc.uses_llm, teacher_probs=self._teacher_probs,
                 seeds=[rc.seed * 997 + i for i in range(task.n_clients)],
-                max_iter=max(rc.maxiter_cap, rc.maxiter0))
+                max_iter=max(rc.maxiter_cap, rc.maxiter0),
+                optimizer=rc.optimizer)
 
         maxiters = [rc.maxiter0] * task.n_clients
         last_losses = [float("inf")] * task.n_clients
@@ -219,8 +220,11 @@ class Orchestrator:
                                             task.clients[i].qX,
                                             task.clients[i].qy))
                     cum_evals[i] += int(n_evals[i])
+                    # metered-run evals only, matching the sequential
+                    # path's (opt.n_evals - n0) — init is not comm-billed
                     comm_t = max(comm_t, self.backend.eval_time(
-                        task.clients[i].n) * (int(n_evals[i]) - 1))
+                        task.clients[i].n)
+                        * (int(n_evals[i]) - self._engine.init_evals))
             else:
                 for i in range(task.n_clients):
                     fn = self._client_loss_fn(i)

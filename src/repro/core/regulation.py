@@ -20,6 +20,8 @@ def regulate(maxiter: int, qnn_loss: float, llm_loss: float, *,
     """New maxiter given the device's latest loss vs the LLM reference."""
     if llm_loss <= 0 or not math.isfinite(llm_loss):
         return maxiter
+    if not math.isfinite(qnn_loss):        # diverged client (NaN/inf loss):
+        return max(min_iter, min(maxiter, cap))   # hold the current budget
     if qnn_loss <= llm_loss:               # Alg. 1: only boost when behind
         return max(min_iter, min(maxiter, cap))
     ratio = qnn_loss / llm_loss

@@ -20,8 +20,13 @@ class TerminationCriterion:
         h.append(float(server_loss))
         if t >= self.t_max:
             return True
-        if len(h) >= 2 and abs(h[-1]) > 0:
-            rel = abs(h[-1] - h[-2]) / abs(h[-1])
+        if len(h) >= 2:
+            if abs(h[-1]) > 0:
+                rel = abs(h[-1] - h[-2]) / abs(h[-1])
+            else:
+                # loss hit exactly 0: a zero-loss plateau (Δ = 0) is
+                # converged; a fresh drop to 0 still counts as progress
+                rel = 0.0 if h[-2] == h[-1] else float("inf")
             self._small = self._small + 1 if rel < self.epsilon else 0
             if self._small >= self.patience:
                 return True

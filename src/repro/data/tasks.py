@@ -19,7 +19,7 @@ from repro.data import federated, genomic, pca as pca_mod, tokenizer, tweets
 
 @dataclass
 class ClientShard:
-    qX: np.ndarray               # (n_i, 4) angle features in [0, π]
+    qX: np.ndarray               # (n_i, n_features) angle feats in [0, π]
     qy: np.ndarray               # (n_i,)
     llm_batch: Dict[str, np.ndarray]     # tokens/labels for LoRA fine-tune
     n: int = 0
@@ -49,7 +49,7 @@ class FederatedTask:
 def build_task(name: str, *, n_clients: int = 5, train_size: int = 1000,
                test_size: int = 200, val_size: int = 100,
                non_iid_alpha: float = 0.0, seed: int = 0,
-               llm_seq_len: int = 64) -> FederatedTask:
+               llm_seq_len: int = 64, n_features: int = 4) -> FederatedTask:
     if name == "genomic":
         seqs, labels = genomic.generate(train_size + test_size + val_size,
                                         seed=seed)
@@ -61,7 +61,7 @@ def build_task(name: str, *, n_clients: int = 5, train_size: int = 1000,
     elif name == "tweets":
         texts, labels = tweets.generate(train_size + test_size + val_size,
                                         seed=seed)
-        feats = tweets.bag_features(texts)
+        feats = tweets.bag_features(texts, n_features=n_features)
         tok = tokenizer.WordTokenizer(tweets.VOCAB, n_labels=3)
         token_lists = [tok.encode(t) for t in texts]
         n_classes = 3
@@ -72,9 +72,15 @@ def build_task(name: str, *, n_clients: int = 5, train_size: int = 1000,
     te = slice(train_size, train_size + test_size)
     va = slice(train_size + test_size, train_size + test_size + val_size)
 
-    # PCA(4) fit on train only, angle-scaled to [0, π]
-    p = pca_mod.fit(feats[tr], n_components=4)
+    # PCA(n_features) fit on train only, angle-scaled to [0, π];
+    # n_features = n_qubits of the QNN that will consume the task
+    p = pca_mod.fit(feats[tr], n_components=n_features)
     qX = p.transform(feats)
+    if qX.shape[1] != n_features:
+        # bag_features caps at its lexicon scores; PCA caps at data rank
+        raise ValueError(
+            f"task {name!r} can only encode {qX.shape[1]} features "
+            f"(requested n_features={n_features})")
 
     if non_iid_alpha > 0:
         shards = federated.split_dirichlet(labels[tr], n_clients,

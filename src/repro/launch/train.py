@@ -34,6 +34,9 @@ def main(argv=None):
     ap.add_argument("--maxiter0", type=int, default=10)
     ap.add_argument("--optimizer", default="nelder-mead",
                     choices=["nelder-mead", "spsa"])
+    ap.add_argument("--engine", default="sequential",
+                    choices=["sequential", "batched"])
+    ap.add_argument("--n-qubits", type=int, default=4)
     ap.add_argument("--backend", default="exact",
                     choices=["exact", "fake", "aersim", "real"])
     ap.add_argument("--llm", default="tiny-llm")
@@ -48,12 +51,14 @@ def main(argv=None):
     t0 = time.time()
     task = build_task(args.task, n_clients=args.clients,
                       train_size=args.train_size,
-                      non_iid_alpha=args.non_iid_alpha, seed=args.seed)
+                      non_iid_alpha=args.non_iid_alpha, seed=args.seed,
+                      n_features=args.n_qubits)
     rc = RunConfig(
         method=args.method, select_frac=args.select_frac,
         regulation=args.regulation, maxiter0=args.maxiter0,
         n_rounds=args.rounds, epsilon=args.epsilon,
-        optimizer=args.optimizer, backend=args.backend,
+        optimizer=args.optimizer, engine=args.engine,
+        n_qubits=args.n_qubits, backend=args.backend,
         llm_name=args.llm, llm_steps=args.llm_steps,
         early_stop=not args.no_early_stop, seed=args.seed)
     res = Orchestrator(task, rc).run()

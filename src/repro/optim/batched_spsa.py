@@ -33,10 +33,11 @@ import numpy as np
 def make_deltas(seeds: Sequence[int], max_iter: int, dim: int) -> np.ndarray:
     """(C, max_iter, dim) Rademacher directions, matching the draw order of
     ``gradfree.spsa_run`` (one ``rng.choice([-1,1], size=dim)`` per iter,
-    fresh ``default_rng(seed)`` per client with k=0)."""
+    the ``gradfree.spsa_rng(seed, 0)`` stream per client — a fresh run)."""
+    from repro.optim.gradfree import spsa_rng
     out = np.empty((len(seeds), max_iter, dim), np.float64)
     for c, seed in enumerate(seeds):
-        rng = np.random.default_rng(int(seed))
+        rng = spsa_rng(seed, 0)
         for i in range(max_iter):
             out[c, i] = rng.choice([-1.0, 1.0], size=dim)
     return out

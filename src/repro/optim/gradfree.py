@@ -21,7 +21,7 @@ paper's regulated-optimizer execution model (Alg. 1 lines 11–17).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,17 +58,24 @@ def nm_init(fn: Callable, x0: np.ndarray, *, step: float = 0.25) -> NMState:
 
 
 def nm_run(fn: Callable, state: NMState, maxiter: int,
-           *, alpha=1.0, gamma=2.0, rho=0.5, sigma=0.5) -> NMState:
-    """Run ``maxiter`` simplex iterations from ``state`` (resumable)."""
+           *, alpha=1.0, gamma=2.0, rho=0.5, sigma=0.5,
+           trace: Optional[List[int]] = None) -> NMState:
+    """Run ``maxiter`` simplex iterations from ``state`` (resumable).
+
+    ``trace``, if given, receives one ``batched_nm.BRANCH_*`` code per
+    iteration — the decision-parity contract with the batched engine.
+    """
     simplex = state.simplex.copy()
     fvals = state.fvals.copy()
     n = simplex.shape[1]
     evals = 0
 
     for _ in range(max(0, int(maxiter))):
-        order = np.argsort(fvals)
+        # stable sort: ties resolve identically to the batched engine
+        order = np.argsort(fvals, kind="stable")
         simplex, fvals = simplex[order], fvals[order]
         centroid = simplex[:-1].mean(axis=0)
+        branch = -1
 
         xr = centroid + alpha * (centroid - simplex[-1])
         fr = float(fn(xr)); evals += 1
@@ -77,19 +84,26 @@ def nm_run(fn: Callable, state: NMState, maxiter: int,
             fe = float(fn(xe)); evals += 1
             if fe < fr:
                 simplex[-1], fvals[-1] = xe, fe
+                branch = 0                      # BRANCH_EXPAND_XE
             else:
                 simplex[-1], fvals[-1] = xr, fr
+                branch = 1                      # BRANCH_EXPAND_XR
         elif fr < fvals[-2]:
             simplex[-1], fvals[-1] = xr, fr
+            branch = 2                          # BRANCH_REFLECT
         else:
             xc = centroid + rho * (simplex[-1] - centroid)
             fc = float(fn(xc)); evals += 1
             if fc < fvals[-1]:
                 simplex[-1], fvals[-1] = xc, fc
+                branch = 3                      # BRANCH_CONTRACT
             else:   # shrink
+                branch = 4                      # BRANCH_SHRINK
                 for i in range(1, n + 1):
                     simplex[i] = simplex[0] + sigma * (simplex[i] - simplex[0])
                     fvals[i] = float(fn(simplex[i])); evals += 1
+        if trace is not None:
+            trace.append(branch)
 
     return NMState(simplex, fvals, state.n_evals + evals,
                    state.n_iters + max(0, int(maxiter)))
@@ -98,6 +112,19 @@ def nm_run(fn: Callable, state: NMState, maxiter: int,
 # ---------------------------------------------------------------------------
 # SPSA
 # ---------------------------------------------------------------------------
+def spsa_rng(seed: int, k: int) -> np.random.Generator:
+    """Rademacher stream for a resumed SPSA run.
+
+    ``default_rng(seed + k)`` would collide across clients: federated
+    client seeds are consecutive (``rc.seed·997 + i``), so client ``i``
+    resumed at iteration ``k`` would replay client ``i+k``'s fresh stream.
+    ``SeedSequence((seed, k))`` hashes the pair, keeping every
+    (client, resume-point) stream distinct.  ``batched_spsa.make_deltas``
+    derives its draws from this same function — draw-for-draw parity.
+    """
+    return np.random.default_rng(np.random.SeedSequence((int(seed), int(k))))
+
+
 @dataclass
 class SPSAState:
     x: np.ndarray
@@ -123,7 +150,7 @@ def spsa_init(fn: Callable, x0: np.ndarray, *, seed: int = 0) -> SPSAState:
 def spsa_run(fn: Callable, state: SPSAState, maxiter: int, *,
              a=0.2, c=0.15, A=10.0, alpha=0.602, gamma=0.101,
              clip: float = 1.0) -> SPSAState:
-    rng = np.random.default_rng(state.seed + state.k)
+    rng = spsa_rng(state.seed, state.k)
     x, fbest, k, evals = state.x.copy(), state.f, state.k, 0
     for _ in range(max(0, int(maxiter))):
         ak = a / (k + 1 + A) ** alpha

@@ -55,13 +55,26 @@ class Backend:
 
 
 def sample_counts(key, probs: jnp.ndarray, shots: int) -> jnp.ndarray:
-    """Multinomial shot sampling per row of (B, C) probabilities."""
+    """Multinomial shot sampling per row of (B, C) probabilities.
+
+    O(B·C + B·shots) memory: inverse-CDF sampling — per-row cumulative
+    probabilities (B, C), uniform draws (shots, B) located by a batched
+    ``searchsorted``, scatter-added straight into the (B, C) count
+    matrix.  (``jax.random.categorical`` would materialize a
+    (shots, B, C) gumbel tensor internally.)
+    """
     B, C = probs.shape
-    logits = jnp.log(jnp.clip(probs, 1e-12, 1.0))
-    draws = jax.random.categorical(key, logits[:, None, :].repeat(shots, 1),
-                                   axis=-1)                    # (B, shots)
-    onehot = jax.nn.one_hot(draws, C, dtype=jnp.float32)
-    return onehot.sum(axis=1)
+    cdf = jnp.cumsum(jnp.clip(probs, 0.0, 1.0), axis=-1)       # (B, C)
+    # renormalize — the old categorical path did so implicitly via logits
+    cdf = cdf / jnp.maximum(cdf[:, -1:], 1e-12)
+    u = jax.random.uniform(key, (shots, B), cdf.dtype)
+    draws = jax.vmap(
+        lambda row_cdf, row_u: jnp.searchsorted(row_cdf, row_u,
+                                                side="right"),
+        in_axes=(0, 1), out_axes=1)(cdf, u)                    # (shots, B)
+    draws = jnp.minimum(draws, C - 1)      # cumsum rounding below 1.0
+    counts = jnp.zeros((B, C), jnp.float32)
+    return counts.at[jnp.arange(B)[None, :], draws].add(1.0)
 
 
 # Calibrated instances.  Latencies reproduce Table-I orderings:

@@ -1,10 +1,12 @@
 """Engine parity: batched (fused device program) vs sequential reference.
 
 The batched engine must reproduce the sequential trajectories — same
-perturbation draws, same update law, same regulation — up to f32/f64
-arithmetic-order noise, for native SPSA; the Nelder–Mead config maps its
-regulated budgets onto SPSA iteration masks and must stay well-behaved.
+perturbation draws (SPSA) or same branch decisions (Nelder–Mead), same
+update law, same regulation, same eval accounting — up to f32/f64
+arithmetic-order noise, for both native optimizers.
 """
+import warnings
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -57,7 +59,7 @@ def test_make_deltas_matches_gradfree_draw_order():
     """Same rng construction + per-iteration draw as gradfree.spsa_run."""
     seed, m, dim = 42, 5, 4
     want = []
-    rng = np.random.default_rng(seed)
+    rng = gradfree.spsa_rng(seed, 0)    # fresh run: k = 0
     for _ in range(m):
         want.append(rng.choice([-1.0, 1.0], size=dim))
     got = make_deltas([seed], m, dim)[0]
@@ -102,29 +104,71 @@ def test_qcnn_tweets_engine_parity():
     assert bat.series("cum_evals") == seq.series("cum_evals")
 
 
-def test_nelder_mead_budgets_map_onto_spsa_masks(small_task):
-    """optimizer="nelder-mead" + engine="batched": regulated budgets drive
-    SPSA iteration masks; run must regulate, converge, and account evals
-    as 3·maxiter + 2 per client per round."""
-    res = run_experiment(small_task, method="llm-qfl",
-                         optimizer="nelder-mead", engine="batched",
-                         n_rounds=3, maxiter0=5, llm_steps=8,
-                         early_stop=False, seed=2)
-    assert len(res.rounds) == 3
-    assert all(np.isfinite(r.server_loss) for r in res.rounds)
-    assert res.rounds[-1].server_loss <= res.rounds[0].server_loss * 1.5
-    assert any(m != 5 for r in res.rounds[1:] for m in r.maxiters)
-    expect = [3 * m + 2 for m in res.rounds[0].maxiters]
-    assert res.rounds[0].cum_evals == expect
+def test_qfl_nelder_mead_engine_parity(small_task):
+    """The paper's default optimizer runs natively on the batched engine:
+    same trajectories, same branch-dependent eval counts — no warning."""
+    kw = dict(method="qfl", optimizer="nelder-mead", n_rounds=3,
+              maxiter0=5, early_stop=False)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        seq, bat = _pair(small_task, **kw)
+    # the old NM→SPSA-mask fallback warned; native NM must not
+    assert not [w for w in caught if "SPSA" in str(w.message)]
+    np.testing.assert_allclose(bat.series("server_loss"),
+                               seq.series("server_loss"), atol=1e-5)
+    assert abs(bat.rounds[-1].server_loss
+               - seq.rounds[-1].server_loss) <= 1e-5
+    np.testing.assert_allclose(bat.theta_g, seq.theta_g, atol=1e-4)
+    assert bat.series("maxiters") == seq.series("maxiters")
+    assert bat.series("cum_evals") == seq.series("cum_evals")
+    assert bat.series("selected") == seq.series("selected")
+
+
+def test_llm_qfl_nelder_mead_engine_parity(small_task):
+    """Full Alg. 1 with the default optimizer: regulation consumes
+    identical losses → identical budgets → identical simplex branches."""
+    kw = dict(method="llm-qfl", optimizer="nelder-mead", n_rounds=3,
+              maxiter0=5, llm_steps=8, early_stop=False, seed=2)
+    seq, bat = _pair(small_task, **kw)
+    assert bat.series("maxiters") == seq.series("maxiters")
+    assert bat.series("cum_evals") == seq.series("cum_evals")
+    np.testing.assert_allclose(bat.series("server_loss"),
+                               seq.series("server_loss"), atol=1e-4)
+    assert abs(bat.rounds[-1].server_loss
+               - seq.rounds[-1].server_loss) <= 1e-5
+    assert any(m != 5 for r in bat.rounds[1:] for m in r.maxiters)
 
 
 def test_batched_engine_comm_accounting(small_task):
-    """Latency model sees 3·maxiter+1 post-init evals, like sequential."""
-    seq, bat = _pair(small_task, method="qfl", optimizer="spsa",
-                     n_rounds=2, maxiter0=4, early_stop=False,
-                     backend="fake")
-    for rs, rb in zip(seq.rounds, bat.rounds):
-        assert rb.comm_time_s == pytest.approx(rs.comm_time_s, rel=1e-9)
+    """Latency model sees exactly the sequential path's metered-run evals
+    (init is not comm-billed) for both optimizers."""
+    for optimizer in ("spsa", "nelder-mead"):
+        seq, bat = _pair(small_task, method="qfl", optimizer=optimizer,
+                         n_rounds=2, maxiter0=4, early_stop=False,
+                         backend="fake")
+        for rs, rb in zip(seq.rounds, bat.rounds):
+            assert rb.comm_time_s == pytest.approx(rs.comm_time_s,
+                                                   rel=1e-9)
+
+
+def test_batched_engine_six_qubits_smoke():
+    """ROADMAP scale knob: n_qubits is config, the tape compiler is
+    n-generic, and the batched engine runs a 6-qubit VQC end to end."""
+    task = build_task("genomic", n_clients=3, train_size=45, test_size=15,
+                      val_size=15, seed=3, n_features=6)
+    res = run_experiment(task, method="qfl", optimizer="nelder-mead",
+                         engine="batched", n_qubits=6, n_rounds=2,
+                         maxiter0=3, early_stop=False)
+    assert len(res.rounds) == 2
+    assert all(np.isfinite(r.server_loss) for r in res.rounds)
+    from repro.quantum import qnn
+    assert res.theta_g.shape == (
+        qnn.QNNSpec("vqc", n_qubits=6).n_params,)
+
+
+def test_n_qubits_must_match_task_features(small_task):
+    with pytest.raises(ValueError):
+        run_experiment(small_task, n_qubits=6, n_rounds=1)
 
 
 def test_unknown_engine_rejected(small_task):

@@ -39,6 +39,16 @@ def test_regulate_monotone_in_ratio(maxiter, qnn_l, llm_l):
         assert 1 <= lo <= 100 and 1 <= hi <= 100
 
 
+def test_regulate_nonfinite_qnn_loss_holds_budget():
+    """A diverged client (NaN/inf loss) must not crash regulation — the
+    current budget is held, clamped to [min_iter, cap]."""
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        for v in regulation.VARIANTS:
+            assert regulation.regulate(10, bad, 1.0, variant=v) == 10
+    assert regulation.regulate(200, float("nan"), 1.0, cap=100) == 100
+    assert regulation.regulate(0, float("inf"), 1.0, min_iter=1) == 1
+
+
 def test_regulate_variants_distinct():
     vals = {v: regulation.regulate(10, 3.0, 1.0, variant=v)
             for v in regulation.VARIANTS}
@@ -75,6 +85,19 @@ def test_termination_on_plateau():
     assert not t.update(1.0, 1)
     assert not t.update(0.5, 2)
     assert t.update(0.4999, 3)          # rel. improvement 2e-4 < 1e-2
+
+
+def test_termination_zero_loss_plateau():
+    """Exactly-zero server loss must still terminate: Δ = 0 on a zero
+    plateau is converged, not an un-checkable division."""
+    t = TerminationCriterion(epsilon=1e-3, t_max=100)
+    assert not t.update(0.0, 1)
+    assert t.update(0.0, 2)
+    # a fresh drop to 0 is progress, the following plateau converges
+    t2 = TerminationCriterion(epsilon=1e-3, t_max=100)
+    assert not t2.update(1.0, 1)
+    assert not t2.update(0.0, 2)
+    assert t2.update(0.0, 3)
 
 
 def test_termination_tmax():

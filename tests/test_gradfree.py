@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.optim.gradfree import (GradFreeOptimizer, nm_init, nm_run,
-                                  spsa_init, spsa_run)
+                                  spsa_init, spsa_rng, spsa_run)
 
 
 def quad(x):
@@ -44,6 +44,35 @@ def test_spsa_improves_and_resumes():
     assert f1 < f0
     _, f2 = opt.run(150)
     assert f2 <= f1 + 1e-9
+
+
+def test_spsa_streams_decorrelated_across_clients():
+    """Regression: federated client seeds are consecutive, so the old
+    ``default_rng(seed + k)`` made client i resumed at iteration k replay
+    client i+k's fresh Rademacher stream.  ``spsa_rng`` hashes the
+    (seed, k) pair — every (client, resume-point) stream is distinct."""
+    a = spsa_rng(5, 1).choice([-1.0, 1.0], size=64)
+    b = spsa_rng(6, 0).choice([-1.0, 1.0], size=64)
+    assert not np.array_equal(a, b)
+    # the old scheme would have collided: default_rng(6) on both sides
+    old_a = np.random.default_rng(5 + 1).choice([-1.0, 1.0], size=64)
+    old_b = np.random.default_rng(6 + 0).choice([-1.0, 1.0], size=64)
+    assert np.array_equal(old_a, old_b)
+    # same pair → same stream (resumability stays deterministic)
+    assert np.array_equal(spsa_rng(5, 1).choice([-1.0, 1.0], size=64),
+                          spsa_rng(5, 1).choice([-1.0, 1.0], size=64))
+
+
+def test_spsa_resume_uses_distinct_stream_from_fresh_run():
+    """Resuming at k>0 must not replay the fresh-run draws: the (3, 5)
+    stream is not the continuation of the (3, 0) stream, nor its start."""
+    dim = 6
+    fresh = spsa_rng(3, 0)
+    fresh_prefix = fresh.choice([-1.0, 1.0], size=(5, dim))
+    fresh_continuation = fresh.choice([-1.0, 1.0], size=(5, dim))
+    resumed = spsa_rng(3, 5).choice([-1.0, 1.0], size=(5, dim))
+    assert not np.array_equal(resumed, fresh_continuation)
+    assert not np.array_equal(resumed, fresh_prefix)
 
 
 def test_rosenbrock_both_methods_bounded():

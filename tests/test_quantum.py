@@ -131,6 +131,21 @@ def test_shot_sampling_concentrates():
     assert abs(float(counts[0, 0]) / 1000 - 0.75) < 0.05
 
 
+def test_shot_sampling_distribution_and_shape():
+    """sample_counts draws per-row multinomials without materializing a
+    (B, shots, C) tensor: counts sum to shots and the empirical
+    frequencies converge to the row distributions."""
+    p = jnp.array([[0.6, 0.3, 0.1],
+                   [0.05, 0.05, 0.9],
+                   [1 / 3, 1 / 3, 1 / 3]])
+    shots = 20000
+    counts = backends.sample_counts(KEY, p, shots)
+    assert counts.shape == p.shape
+    np.testing.assert_allclose(np.asarray(counts.sum(axis=1)), shots)
+    np.testing.assert_allclose(np.asarray(counts) / shots, np.asarray(p),
+                               atol=0.02)
+
+
 def test_latency_ordering_matches_table1():
     """Table I: Fake < AerSim < Real comm time."""
     n = 100
