@@ -8,8 +8,11 @@ matched convergence.
 
 ``--optimizer`` selects the update law both paths run: "spsa" or
 "nelder-mead" (the paper's default, batched via speculative simplex
-candidate evaluation).  ``--smoke`` shrinks the workload for CI;
-``--engine X`` runs one engine only (for profiling).
+candidate evaluation).  ``--backend`` picks the quantum backend — the
+noisy ones run keyed finite-shot sampling on the fast path, so the
+speedup/parity gate covers Table I's shot-noise setting too.  ``--smoke``
+shrinks the workload for CI; ``--engine X`` runs one engine only (for
+profiling).
 """
 from __future__ import annotations
 
@@ -20,14 +23,15 @@ import numpy as np
 
 from benchmarks.common import emit, get_task
 from repro.core.orchestrator import run_experiment
+from repro.quantum.backends import BACKENDS
 
 
 def _run(task, engine: str, *, rounds: int, maxiter: int,
-         optimizer: str = "spsa"):
+         optimizer: str = "spsa", backend: str = "exact"):
     t0 = time.perf_counter()
     res = run_experiment(task, method="qfl", optimizer=optimizer,
                          engine=engine, n_rounds=rounds, maxiter0=maxiter,
-                         early_stop=False)
+                         early_stop=False, backend=backend)
     wall = time.perf_counter() - t0
     return wall, res
 
@@ -45,6 +49,10 @@ def main(argv=()):
                     default="both")
     ap.add_argument("--optimizer", choices=["spsa", "nelder-mead"],
                     default="spsa")
+    ap.add_argument("--backend", choices=sorted(BACKENDS),
+                    default="exact",
+                    help="quantum backend; noisy ones (fake/aersim/real) "
+                         "run keyed finite-shot sampling in both engines")
     args = ap.parse_args(list(argv))
 
     rounds = args.rounds or (2 if args.smoke else 3)
@@ -58,12 +66,13 @@ def main(argv=()):
     for engine in (("sequential", "batched") if args.engine == "both"
                    else (args.engine,)):
         wall, res = _run(task, engine, rounds=rounds, maxiter=maxiter,
-                         optimizer=args.optimizer)
+                         optimizer=args.optimizer, backend=args.backend)
         results[engine] = (wall, res)
         rows.append({
             "name": f"{engine}_round_s",
             "value": f"{wall / rounds:.3f}",
-            "derived": (f"optimizer={args.optimizer} total={wall:.2f}s "
+            "derived": (f"optimizer={args.optimizer} "
+                        f"backend={args.backend} total={wall:.2f}s "
                         f"rounds={rounds} maxiter={maxiter} "
                         f"clients={args.clients} "
                         f"final_loss={res.rounds[-1].server_loss:.6f}")})
@@ -84,7 +93,7 @@ def main(argv=()):
         # sequential path has no warm state — it re-traces every round
         # by construction, which is precisely its bottleneck)
         w_warm, _ = _run(task, "batched", rounds=rounds, maxiter=maxiter,
-                         optimizer=args.optimizer)
+                         optimizer=args.optimizer, backend=args.backend)
         rows.append({
             "name": "batched_warm_round_s",
             "value": f"{w_warm / rounds:.3f}",

@@ -35,8 +35,30 @@ Per-client ``maxiter`` budgets become **iteration masks** (see
 ``batched_spsa`` / ``batched_nm``): the round always compiles to the same
 shapes, budgets arrive as a traced ``(C,)`` array, and regulation never
 recompiles.  The compiled round program is cached module-wide keyed by
-the static config, so fresh engine instances (new runs, tests, benches)
-with the same task shape reuse it.
+the static config (which includes ``backend.shots`` — keyed sampling
+changes the traced program), so fresh engine instances (new runs, tests,
+benches) with the same task shape reuse it.
+
+Shot-noise key contract
+-----------------------
+Finite-shot backends (``backend.shots > 0``) sample **inside** the fused
+round program, per evaluation, under the ``backends.py`` derivation
+
+    ``eval_key(PRNGKey(seed), round, client, slot)``
+
+``run_round`` takes the orchestrator's 1-based round index and folds it
+with each client id into a ``(C,)`` stack of per-client round keys
+(traced inputs — no recompilation across rounds); the batched optimizers
+fold in the structural evaluation ``slot``.  The sequential path derives
+from the same chain (``orchestrator`` hands ``gradfree`` a per-client
+``key_stream``), so on ``fake``/``aersim``/``real`` both engines use the
+same key for the same evaluation — noisy parity is draw-for-draw, not
+just in distribution.  (Identical keys make identical draws whenever the
+two forwards agree on the sampled CDF; the tape and eager forwards
+differ by ~2e-7 ulp noise, so a uniform draw landing inside that sliver
+of a class boundary could in principle flip one shot — the parity tests
+pin seeds where no draw does.)  With ``shots == 0`` the keys are inert
+and the objective is the deterministic channel.
 
 The sequential path remains the parity reference for both optimizers:
 branch decisions, trajectories, and eval counts of the batched
@@ -62,17 +84,26 @@ def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool,
                     optimizer: str = "spsa", max_iter: int = 100):
     """Jitted local-phase program → (x (C,P), n_evals (C,)).
 
-    spsa        : (qX, qy, mask, teacher, θ_g, iters, deltas)
-    nelder-mead : (qX, qy, mask, teacher, θ_g, iters) — ``max_iter`` is a
-                  static bound (branch-record width), budgets stay traced.
+    spsa        : (qX, qy, mask, teacher, θ_g, iters, deltas, ckeys)
+    nelder-mead : (qX, qy, mask, teacher, θ_g, iters, ckeys) —
+                  ``max_iter`` is a static bound (branch-record width),
+                  budgets stay traced.
+
+    ``ckeys`` is the (C,) per-client round-key stack (see the module's
+    shot-noise key contract); inert when ``backend.shots == 0``.
     """
     cq = tape_mod.compile_qnn(spec)
     eps = 1e-9
+    sampling = backend.shots > 0
 
-    def client_objective(theta, Xc, yc, mc, tc, theta_g):
+    def client_objective(theta, Xc, yc, mc, tc, theta_g, ckey, slot):
         """F_i + λ·KL + µ·prox for ONE client on its padded shard."""
         probs = tape_mod.tape_probs(cq, theta, Xc)      # raw (B, cls)
-        noisy = backend.transform_probs(probs)
+        if sampling:
+            noisy = backend.transform_probs(
+                probs, jax.random.fold_in(ckey, slot))
+        else:
+            noisy = backend.apply_channel(probs)
         m_sum = jnp.sum(mc)
         p = jnp.take_along_axis(noisy, yc[:, None], axis=1)[:, 0]
         loss = -jnp.sum(jnp.log(p + eps) * mc) / m_sum  # masked NLL
@@ -85,30 +116,43 @@ def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool,
             loss = loss + mu * jnp.mean((theta - theta_g) ** 2)
         return loss
 
-    vobj = jax.vmap(client_objective, in_axes=(0, 0, 0, 0, 0, None))
+    vobj = jax.vmap(client_objective,
+                    in_axes=(0, 0, 0, 0, 0, None, 0, None))
 
-    def prep(qX, qy, mask, teacher, theta_g):
-        """Shared per-round start stack + closed-over objective."""
+    def prep(qX, qy, mask, teacher, theta_g, ckeys):
+        """Shared per-round start stack + closed-over objective.
+
+        The objective is keyed (``f(xs, slot)``) iff the backend
+        samples; the batched optimizers drive the slot schedule.
+        """
         x0 = jnp.tile(theta_g[None, :], (qX.shape[0], 1))
 
-        def f(xs):
-            return vobj(xs, qX, qy, mask, teacher, theta_g)
+        if sampling:
+            def f(xs, slot):
+                return vobj(xs, qX, qy, mask, teacher, theta_g,
+                            ckeys, slot)
+        else:
+            def f(xs):
+                return vobj(xs, qX, qy, mask, teacher, theta_g,
+                            ckeys, jnp.int32(0))
 
         return x0, f
 
     if optimizer == "nelder-mead":
         @jax.jit
-        def round_fn(qX, qy, mask, teacher, theta_g, iters):
-            x0, f = prep(qX, qy, mask, teacher, theta_g)
+        def round_fn(qX, qy, mask, teacher, theta_g, iters, ckeys):
+            x0, f = prep(qX, qy, mask, teacher, theta_g, ckeys)
             simplex, fvals, n_evals, _ = batched_nm(f, x0, iters,
-                                                    int(max_iter))
+                                                    int(max_iter),
+                                                    keyed=sampling)
             x, _ = best_point(simplex, fvals)
             return x, n_evals
     elif optimizer == "spsa":
         @jax.jit
-        def round_fn(qX, qy, mask, teacher, theta_g, iters, deltas):
-            x0, f = prep(qX, qy, mask, teacher, theta_g)
-            x, _, n_evals = batched_spsa(f, x0, iters, deltas)
+        def round_fn(qX, qy, mask, teacher, theta_g, iters, deltas, ckeys):
+            x0, f = prep(qX, qy, mask, teacher, theta_g, ckeys)
+            x, _, n_evals = batched_spsa(f, x0, iters, deltas,
+                                         keyed=sampling)
             return x, n_evals
     else:
         raise ValueError(f"unknown batched optimizer {optimizer!r}")
@@ -118,8 +162,11 @@ def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool,
 
 def get_round_fn(spec, backend, *, lam: float, mu: float, use_llm: bool,
                  optimizer: str = "spsa", max_iter: int = 100):
-    # max_iter only shapes the NM branch record — keep SPSA keys stable
-    key = (spec, backend, float(lam), float(mu), bool(use_llm), optimizer,
+    # max_iter only shapes the NM branch record — keep SPSA keys stable.
+    # backend (frozen dataclass) already hashes shots; the explicit
+    # element documents that sampling is part of the program's identity.
+    key = (spec, backend, int(backend.shots), float(lam), float(mu),
+           bool(use_llm), optimizer,
            int(max_iter) if optimizer == "nelder-mead" else None)
     if key not in _ROUND_CACHE:
         _ROUND_CACHE[key] = _build_round_fn(spec, backend, lam, mu,
@@ -133,7 +180,7 @@ class BatchedRoundEngine:
     def __init__(self, task, spec, backend, *, lam: float, mu: float,
                  use_llm: bool, teacher_probs: Optional[List] = None,
                  seeds: Sequence[int] = (), max_iter: int = 100,
-                 optimizer: str = "spsa"):
+                 optimizer: str = "spsa", seed: int = 0):
         C = task.n_clients
         n_cls = task.n_classes
         b_max = max(cl.n for cl in task.clients)
@@ -160,23 +207,33 @@ class BatchedRoundEngine:
         # sequential-path evals spent before the metered run: spsa_init
         # does 1, nm_init does n+1 (the initial simplex)
         self.init_evals = 1 if optimizer == "spsa" else spec.n_params + 1
+        # shot-noise key chain root: fold_in(round)/fold_in(client) happen
+        # per run_round, fold_in(slot) inside the optimizers
+        self._base_key = jax.random.PRNGKey(seed)
+        self._n_clients = C
         self._round = get_round_fn(spec, backend, lam=lam, mu=mu,
                                    use_llm=use_llm, optimizer=optimizer,
                                    max_iter=max_iter)
 
-    def run_round(self, theta_g: np.ndarray, maxiters: Sequence[int]
-                  ) -> Tuple[np.ndarray, np.ndarray]:
+    def run_round(self, theta_g: np.ndarray, maxiters: Sequence[int],
+                  round_idx: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         """One local-training phase for all clients.
 
-        Returns (thetas (C, P) float64, n_evals (C,) int) — the trained
+        ``round_idx`` is the orchestrator's 1-based round counter — the
+        ``round`` stage of the key-derivation contract.  Returns
+        (thetas (C, P) float64, n_evals (C,) int) — the trained
         per-client parameters and the sequential-equivalent evaluation
         counts (``init_evals`` + the metered run's branch-dependent spend)
         for comm accounting.
         """
+        rk = jax.random.fold_in(self._base_key, round_idx)
+        ckeys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            rk, jnp.arange(self._n_clients))
         args = [self._qX, self._qy, self._mask, self._teacher,
                 jnp.asarray(theta_g, jnp.float32),
                 jnp.asarray(np.asarray(maxiters, np.int32))]
         if self._optimizer == "spsa":
             args.append(self._deltas)
+        args.append(ckeys)
         x, n_evals = self._round(*args)
         return np.asarray(x, np.float64), np.asarray(n_evals, np.int64)

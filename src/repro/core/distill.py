@@ -27,8 +27,15 @@ def make_client_objective(qnn_loss_fn: Callable, qnn_forward: Callable,
                           qX: jnp.ndarray,
                           teacher_probs: Optional[jnp.ndarray],
                           theta_g: Optional[np.ndarray], *,
-                          lam: float = 0.1, mu: float = 0.01) -> Callable:
-    """theta (np) → float:  F_i + λ·KL(teacher‖student) + µ·‖θ−θ_g‖²/d."""
+                          lam: float = 0.1, mu: float = 0.01,
+                          keyed: bool = False) -> Callable:
+    """theta (np) → float:  F_i + λ·KL(teacher‖student) + µ·‖θ−θ_g‖²/d.
+
+    ``keyed=True`` when ``qnn_loss_fn`` is a finite-shot loss (called as
+    ``fn(theta, key)``); the key feeds only the F_i shot sampling — the
+    KL penalty reads the *raw* student probabilities, mirroring the
+    batched engine's objective term for term.
+    """
     tg = None if theta_g is None else jnp.asarray(theta_g, jnp.float32)
 
     @jax.jit
@@ -40,6 +47,13 @@ def make_client_objective(qnn_loss_fn: Callable, qnn_forward: Callable,
         if tg is not None and mu > 0:
             out = out + mu * jnp.mean((theta - tg) ** 2)
         return out
+
+    if keyed:
+        def objective_keyed(theta_np, key) -> float:
+            theta = jnp.asarray(theta_np, jnp.float32)
+            return float(qnn_loss_fn(theta, key)) + float(_penalties(theta))
+
+        return objective_keyed
 
     def objective(theta_np) -> float:
         theta = jnp.asarray(theta_np, jnp.float32)

@@ -12,11 +12,21 @@ Per round (T total):  broadcast θ_g → [regulate maxiter → local grad-free
 training on F_i + λ·KL + µ·prox] per device → alignment selection →
 weighted aggregation → server eval → termination check.  Communication
 time is accounted through the quantum backend's latency model (Table I).
+
+On finite-shot backends every evaluation — optimizer objectives, the
+per-round client-loss reports, and the server loss/accuracy — draws its
+shots under the ``backends.py`` key-derivation contract
+``eval_key(PRNGKey(seed), round, client, slot)``: optimizer evaluations
+use client ids ``0..C-1`` with the slot schedule owned by ``gradfree``
+(sequential) / the batched optimizers, reports use ``REPORT_EVAL_SLOT``
+on the client's stream, and server-side evaluations use the reserved
+``SERVER_CLIENT`` id.  Both engines share the derivation, so noisy runs
+are deterministic-by-seed and engine-parity holds draw-for-draw.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import Dict, List, Optional
 
 import jax
@@ -46,6 +56,8 @@ class RunConfig:
     optimizer: str = "nelder-mead"     # | "spsa"
     engine: str = "sequential"         # | "batched" (one jitted round prog)
     backend: str = "exact"
+    shots_override: Optional[int] = None   # replace the backend's shots
+                                           # (0 = channel-only ablation)
     n_qubits: int = 4                  # must match the task's feature dim
     llm_name: str = "tiny-llm"
     llm_steps: int = 30
@@ -105,6 +117,14 @@ class Orchestrator:
         self.spec = qnn.QNNSpec(kind, n_qubits=rc.n_qubits,
                                 n_classes=task.n_classes)
         self.backend = backend_mod.get(rc.backend)
+        if rc.shots_override is not None:
+            if rc.shots_override < 0:
+                raise ValueError("shots_override must be >= 0")
+            self.backend = dc_replace(self.backend,
+                                      shots=int(rc.shots_override))
+        # root of the shot-noise key chain (fold_in round/client/slot);
+        # distinct from the split-based init-param stream below
+        self._noise_base = jax.random.PRNGKey(rc.seed)
         if rc.engine == "batched":
             # tape-compiled forward: same math (≤1e-6), compiles in a
             # fraction of the unrolled eager circuit's time
@@ -116,25 +136,52 @@ class Orchestrator:
         self._engine = None
 
     # -- helpers -------------------------------------------------------------
-    def _nll(self, theta: np.ndarray, X, y) -> float:
+    def _measure_probs(self, theta: np.ndarray, X, key) -> jnp.ndarray:
+        """Forward + full backend measurement (channel, keyed sampling)."""
         probs = self.fwd(jnp.asarray(theta, jnp.float32), jnp.asarray(X))
-        probs = self.backend.transform_probs(probs)
+        return self.backend.transform_probs(probs, key)
+
+    def _nll(self, theta: np.ndarray, X, y, key=None) -> float:
+        probs = self._measure_probs(theta, X, key)
         return float(qnn.nll_loss(probs, jnp.asarray(y)))
 
-    def _acc(self, theta: np.ndarray, X, y) -> float:
-        probs = self.fwd(jnp.asarray(theta, jnp.float32), jnp.asarray(X))
+    def _acc(self, theta: np.ndarray, X, y, key=None) -> float:
+        # accuracy is measured through the backend like the loss — the
+        # Table-I noisy-vs-exact accuracy ordering is observed, not
+        # assumed from the noiseless forward
+        probs = self._measure_probs(theta, X, key)
         return float(qnn.accuracy(probs, jnp.asarray(y)))
+
+    def _mkey(self, t: int, client: int, slot: int):
+        """Measurement key for a reporting/server eval; None when the
+        backend does not sample (channel-only is key-free)."""
+        if not self.backend.shots:
+            return None
+        return backend_mod.eval_key(self._noise_base, t, client, slot)
+
+    def _eval_stream(self, t: int, client: int):
+        """slot → key stream for client ``client``'s optimizer in round
+        ``t`` (the contract's sequential-path form); None when exact."""
+        if not self.backend.shots:
+            return None
+        base = jax.random.fold_in(
+            jax.random.fold_in(self._noise_base, t), client)
+        return lambda slot: jax.random.fold_in(base, slot)
 
     def _client_loss_fn(self, i: int):
         c = self.task.clients[i]
         X, y = jnp.asarray(c.qX), jnp.asarray(c.qy)
+        keyed = self.backend.shots > 0
         base = qnn.make_loss_fn(self.spec, X, y, backend=self.backend)
         if not self.rc.uses_llm:
+            if keyed:
+                return lambda th, key: float(
+                    base(jnp.asarray(th, jnp.float32), key))
             return lambda th: float(base(jnp.asarray(th, jnp.float32)))
         teacher = self._teacher_probs[i]
         return distill.make_client_objective(
             base, self.fwd, X, teacher, self._theta_g,
-            lam=self.rc.lam, mu=self.rc.mu)
+            lam=self.rc.lam, mu=self.rc.mu, keyed=keyed)
 
     # -- Step 1: LLM fine-tuning (round 1 only) -------------------------------
     def _llm_round(self):
@@ -187,7 +234,7 @@ class Orchestrator:
                 use_llm=rc.uses_llm, teacher_probs=self._teacher_probs,
                 seeds=[rc.seed * 997 + i for i in range(task.n_clients)],
                 max_iter=max(rc.maxiter_cap, rc.maxiter0),
-                optimizer=rc.optimizer)
+                optimizer=rc.optimizer, seed=rc.seed)
 
         maxiters = [rc.maxiter0] * task.n_clients
         last_losses = [float("inf")] * task.n_clients
@@ -212,13 +259,15 @@ class Orchestrator:
             thetas, losses, comm_t = [], [], 0.0
             if self._engine is not None:
                 th_stack, n_evals = self._engine.run_round(self._theta_g,
-                                                           maxiters)
+                                                           maxiters, t)
                 for i in range(task.n_clients):
                     thetas.append(th_stack[i])
                     # report pure F_i (no penalty) as the device loss
-                    losses.append(self._nll(th_stack[i],
-                                            task.clients[i].qX,
-                                            task.clients[i].qy))
+                    losses.append(self._nll(
+                        th_stack[i], task.clients[i].qX,
+                        task.clients[i].qy,
+                        key=self._mkey(t, i,
+                                       backend_mod.REPORT_EVAL_SLOT)))
                     cum_evals[i] += int(n_evals[i])
                     # metered-run evals only, matching the sequential
                     # path's (opt.n_evals - n0) — init is not comm-billed
@@ -230,21 +279,27 @@ class Orchestrator:
                     fn = self._client_loss_fn(i)
                     opt = GradFreeOptimizer(fn, self._theta_g,
                                             method=rc.optimizer,
-                                            seed=rc.seed * 997 + i)
+                                            seed=rc.seed * 997 + i,
+                                            key_stream=self._eval_stream(
+                                                t, i))
                     n0 = opt.n_evals
                     th, f = opt.run(maxiters[i])
                     thetas.append(np.asarray(th, np.float64))
                     # report pure F_i (no penalty) as the device loss
-                    losses.append(self._nll(th, task.clients[i].qX,
-                                            task.clients[i].qy))
+                    losses.append(self._nll(
+                        th, task.clients[i].qX, task.clients[i].qy,
+                        key=self._mkey(t, i,
+                                       backend_mod.REPORT_EVAL_SLOT)))
                     cum_evals[i] += opt.n_evals
                     comm_t = max(comm_t, self.backend.eval_time(
                         task.clients[i].n) * (opt.n_evals - n0))
             last_losses = list(losses)
 
             # server loss of the current global model (pre-aggregation)
-            server_loss_pre = self._nll(self._theta_g, task.val_qX,
-                                        task.val_qy)
+            server_loss_pre = self._nll(
+                self._theta_g, task.val_qX, task.val_qy,
+                key=self._mkey(t, backend_mod.SERVER_CLIENT,
+                               backend_mod.SERVER_SLOT_LOSS_PRE))
 
             # client selection (Sec. III-B)
             if rc.uses_llm and rc.select_frac < 1.0:
@@ -260,15 +315,22 @@ class Orchestrator:
             self._theta_g = sum(
                 wi * thetas[i] for wi, i in zip(w, sel))
 
-            server_loss = self._nll(self._theta_g, task.val_qX, task.val_qy)
+            server_loss = self._nll(
+                self._theta_g, task.val_qX, task.val_qy,
+                key=self._mkey(t, backend_mod.SERVER_CLIENT,
+                               backend_mod.SERVER_SLOT_LOSS_POST))
             rec = RoundRecord(
                 t=t, maxiters=list(maxiters), ratios=ratios,
                 client_losses=losses, selected=sel,
                 server_loss=server_loss,
-                server_val_acc=self._acc(self._theta_g, task.val_qX,
-                                         task.val_qy),
-                server_test_acc=self._acc(self._theta_g, task.test_qX,
-                                          task.test_qy),
+                server_val_acc=self._acc(
+                    self._theta_g, task.val_qX, task.val_qy,
+                    key=self._mkey(t, backend_mod.SERVER_CLIENT,
+                                   backend_mod.SERVER_SLOT_VAL_ACC)),
+                server_test_acc=self._acc(
+                    self._theta_g, task.test_qX, task.test_qy,
+                    key=self._mkey(t, backend_mod.SERVER_CLIENT,
+                                   backend_mod.SERVER_SLOT_TEST_ACC)),
                 comm_time_s=comm_t, cum_evals=list(cum_evals),
                 var_all=var["var_all"], var_selected=var["var_selected"])
             res.rounds.append(rec)

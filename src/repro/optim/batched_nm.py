@@ -26,6 +26,15 @@ Branch decisions per iteration are recorded in a ``(C, max_iter)`` code
 array (``BRANCH_*`` below; ``BRANCH_INACTIVE`` past a client's budget) —
 the parity contract with ``gradfree.nm_run(..., trace=...)`` is decision-
 for-decision equality, which ``tests/test_batched_nm.py`` enforces.
+
+Finite-shot objectives (``keyed=True``) are called as ``f(xs, slot)``
+with the slot schedule of the ``backends.py`` key-derivation contract:
+init row ``r`` → slot ``r``; iteration ``i``'s speculative candidates
+``[xr, xe, xc, shrink 1..n]`` → ``base..base+n+2`` with
+``base = (n+1) + i·(n+3)``.  A candidate owns its slot whether it is
+evaluated speculatively (here) or lazily (``gradfree.nm_run``), so the
+draws of every candidate the sequential path *does* evaluate match
+bitwise and the branch ladder decides identically.
 """
 from __future__ import annotations
 
@@ -56,11 +65,14 @@ def init_simplexes(x0: jnp.ndarray, *, step: float = 0.25) -> jnp.ndarray:
 
 def batched_nm(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
                max_iter: int, *,
-               alpha=1.0, gamma=2.0, rho=0.5, sigma=0.5, step: float = 0.25
+               alpha=1.0, gamma=2.0, rho=0.5, sigma=0.5, step: float = 0.25,
+               keyed: bool = False
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Masked batched Nelder–Mead.  Traceable (use under ``jax.jit``).
 
-    f        : (C, P) → (C,)  vmapped objective
+    f        : (C, P) → (C,)  vmapped objective; with ``keyed=True`` it
+               is called as ``f(xs, slot)`` where ``slot`` is the
+               (traced) contract slot (see module docstring)
     x0       : (C, P) start (typically θ_g broadcast to all clients)
     iters    : (C,)   per-client iteration budgets (mask, not trip count)
     max_iter : static upper bound on any budget (branch-record width)
@@ -74,11 +86,15 @@ def batched_nm(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     iters = jnp.asarray(iters, jnp.int32)
     C, n = x0.shape
 
-    # f over a (C, K, P) candidate stack → (C, K)
-    fstack = jax.vmap(f, in_axes=1, out_axes=1)
+    # f over a (C, K, P) candidate stack (+ (K,) slots) → (C, K)
+    if keyed:
+        fstack = jax.vmap(f, in_axes=(1, 0), out_axes=1)
+    else:
+        fstack = lambda cand, slots: jax.vmap(
+            lambda xs: f(xs), in_axes=1, out_axes=1)(cand)
 
     simplex0 = init_simplexes(x0, step=step)
-    fvals0 = fstack(simplex0)                                # (C, n+1)
+    fvals0 = fstack(simplex0, jnp.arange(n + 1))             # (C, n+1)
     evals0 = jnp.full((C,), n + 1, jnp.int32)
     branches0 = jnp.full((C, int(max_iter)), BRANCH_INACTIVE, jnp.int32)
 
@@ -97,7 +113,8 @@ def batched_nm(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
         shrink_x = best[:, None, :] + sigma * (sx[:, 1:, :] - best[:, None, :])
         cand = jnp.concatenate(
             [jnp.stack([xr, xe, xc], axis=1), shrink_x], axis=1)
-        fcand = fstack(cand)                                 # (C, n+3)
+        slots = (n + 1) + i * (n + 3) + jnp.arange(n + 3)
+        fcand = fstack(cand, slots)                          # (C, n+3)
         fr, fe, fc = fcand[:, 0], fcand[:, 1], fcand[:, 2]
         f_shrink = fcand[:, 3:]
 

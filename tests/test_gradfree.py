@@ -4,10 +4,79 @@ import pytest
 
 from repro.optim.gradfree import (GradFreeOptimizer, nm_init, nm_run,
                                   spsa_init, spsa_rng, spsa_run)
+from repro.quantum.backends import FINAL_EVAL_SLOT
 
 
 def quad(x):
     return float(np.sum((x - 1.0) ** 2))
+
+
+def _recording_stream(slots):
+    """key_stream stub: records the contract slot of every evaluation."""
+    return lambda slot: slots.append(slot)
+
+
+def test_nm_key_stream_slot_schedule():
+    """Keyed NM evaluates on the contract slots: init rows 0..n, then
+    per (global) iteration i with base=(n+1)+i·(n+3): reflect→base,
+    expand→base+1, contract→base+2, shrink row j→base+2+j — the same
+    schedule batched_nm drives, so draws match engine-for-engine."""
+    n = 3
+    slots, trace = [], []
+    fn = lambda x, key=None: quad(x)
+    st = nm_init(fn, np.zeros(n), key_stream=_recording_stream(slots))
+    assert slots == list(range(n + 1))
+
+    iters = 8
+    slots.clear()
+    st = nm_run(fn, st, iters, trace=trace,
+                key_stream=_recording_stream(slots))
+    want = []
+    for i, branch in enumerate(trace):
+        base = (n + 1) + i * (n + 3)
+        want.append(base)                        # reflect, always
+        if branch in (0, 1):
+            want.append(base + 1)                # expand
+        elif branch in (3, 4):
+            want.append(base + 2)                # contract
+            if branch == 4:
+                want.extend(base + 2 + j for j in range(1, n + 1))
+    assert slots == want
+
+    # resume: global n_iters keeps advancing the slot bases
+    slots.clear()
+    nm_run(fn, st, 1, key_stream=_recording_stream(slots))
+    assert slots[0] == (n + 1) + iters * (n + 3)
+
+
+def test_spsa_key_stream_slot_schedule():
+    """Keyed SPSA slots: init→0, iteration k→{1,2,3}+3k, final polish→
+    FINAL_EVAL_SLOT; resumes continue from the global counter."""
+    slots = []
+    fn = lambda x, key=None: quad(x)
+    st = spsa_init(fn, np.zeros(4), seed=0,
+                   key_stream=_recording_stream(slots))
+    assert slots == [0]
+    slots.clear()
+    st = spsa_run(fn, st, 2, key_stream=_recording_stream(slots))
+    assert slots == [1, 2, 3, 4, 5, 6, FINAL_EVAL_SLOT]
+    slots.clear()
+    spsa_run(fn, st, 1, key_stream=_recording_stream(slots))
+    assert slots == [7, 8, 9, FINAL_EVAL_SLOT]
+
+
+def test_keyed_and_unkeyed_trajectories_match_when_noise_free():
+    """key_stream only changes the calling convention — with an
+    objective that ignores the key, results are identical."""
+    ks = lambda slot: None
+    for method in ("nelder-mead", "spsa"):
+        a = GradFreeOptimizer(quad, np.zeros(4), method=method, seed=3)
+        b = GradFreeOptimizer(lambda x, key: quad(x), np.zeros(4),
+                              method=method, seed=3, key_stream=ks)
+        xa, fa = a.run(25)
+        xb, fb = b.run(25)
+        np.testing.assert_array_equal(xa, xb)
+        assert fa == fb and a.n_evals == b.n_evals
 
 
 def test_nm_converges_quadratic():

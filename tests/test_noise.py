@@ -1,0 +1,186 @@
+"""Finite-shot sampling: the keyed noise contract end to end.
+
+Table I's noisy backends (fake/aersim/real, shots=100) must actually
+*sample* — deterministic-by-seed, raising when a sampling context has no
+key, degenerate-input-safe, and live in accuracy/loss reporting — rather
+than silently running the deterministic channel (the regression this
+suite pins down: no call site passed a key, so shot noise never fired).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.orchestrator import run_experiment
+from repro.data.tasks import build_task
+from repro.quantum import backends
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def small_task():
+    return build_task("genomic", n_clients=3, train_size=90, test_size=45,
+                      val_size=30, seed=5)
+
+
+# --- transform_probs contract -------------------------------------------------
+def test_transform_probs_requires_key_when_sampling():
+    """shots>0 without a key must raise — not silently skip sampling."""
+    p = jnp.array([[0.9, 0.1]])
+    for name in ("fake", "aersim", "real"):
+        with pytest.raises(ValueError, match="shots"):
+            backends.get(name).transform_probs(p)
+        # channel-only evaluation is an explicit opt-in
+        out = backends.get(name).apply_channel(p)
+        assert np.isfinite(np.asarray(out)).all()
+    # exact (shots=0) stays key-free
+    np.testing.assert_allclose(
+        np.asarray(backends.get("exact").transform_probs(p)), p)
+
+
+def test_transform_probs_samples_with_key():
+    """With a key, the output is an empirical shot frequency: quantized
+    to multiples of 1/shots and != the channel output in general."""
+    b = backends.get("fake")
+    p = jnp.tile(jnp.array([[0.7, 0.3]]), (8, 1))
+    out = np.asarray(b.transform_probs(p, key=KEY))
+    chan = np.asarray(b.apply_channel(p))
+    quant = out * b.shots
+    np.testing.assert_allclose(quant, np.round(quant), atol=1e-4)
+    assert not np.allclose(out, chan)
+    # same key → same draws; different key → (generically) different
+    out2 = np.asarray(b.transform_probs(p, key=KEY))
+    np.testing.assert_array_equal(out, out2)
+    out3 = np.asarray(b.transform_probs(p, key=jax.random.PRNGKey(1)))
+    assert not np.array_equal(out, out3)
+
+
+def test_transform_probs_traceable_under_jit_and_vmap():
+    """The sampling stage is usable inside compiled programs — the fused
+    round engine's requirement."""
+    b = backends.get("fake")
+    p = jnp.tile(jnp.array([[0.6, 0.4]]), (4, 1))
+
+    jit_out = jax.jit(b.transform_probs)(p, KEY)
+    np.testing.assert_array_equal(np.asarray(jit_out),
+                                  np.asarray(b.transform_probs(p, KEY)))
+
+    stack = jnp.stack([p, p])
+    keys = jnp.stack([KEY, jax.random.PRNGKey(7)])
+    vout = jax.vmap(b.transform_probs)(stack, keys)
+    assert vout.shape == stack.shape
+
+
+# --- sample_counts hardening --------------------------------------------------
+def test_sample_counts_zero_mass_rows_fall_back_to_uniform():
+    """Regression: an all-zero row used to dump every shot into class
+    C-1 through the clamped searchsorted."""
+    shots = 3000
+    p = jnp.array([[0.0, 0.0, 0.0], [0.2, 0.3, 0.5]])
+    counts = np.asarray(backends.sample_counts(KEY, p, shots))
+    np.testing.assert_allclose(counts.sum(axis=1), shots)
+    np.testing.assert_allclose(counts[0] / shots, [1 / 3] * 3, atol=0.04)
+    np.testing.assert_allclose(counts[1] / shots, [0.2, 0.3, 0.5],
+                               atol=0.04)
+    # negative-clip degenerate row behaves the same
+    neg = jnp.array([[-1.0, -2.0, -0.5]])
+    counts = np.asarray(backends.sample_counts(KEY, neg, shots))
+    np.testing.assert_allclose(counts[0] / shots, [1 / 3] * 3, atol=0.04)
+
+
+def test_sample_counts_dtype_follows_probs():
+    p16 = jnp.array([[0.5, 0.5]], jnp.bfloat16)
+    assert backends.sample_counts(KEY, p16, 10).dtype == jnp.bfloat16
+    p32 = jnp.array([[0.5, 0.5]], jnp.float32)
+    assert backends.sample_counts(KEY, p32, 10).dtype == jnp.float32
+
+
+def test_sample_counts_low_precision_does_not_saturate():
+    """Counts accumulate in f32 before the dtype cast: a bfloat16 input
+    with shots > 256 must not plateau at 256 (bf16's integer ceiling)."""
+    p = jnp.array([[1.0, 0.0]], jnp.bfloat16)
+    counts = backends.sample_counts(KEY, p, 1000)
+    assert float(counts[0, 0]) == pytest.approx(1000, rel=0.01)
+
+
+# --- key derivation -----------------------------------------------------------
+def test_eval_key_distinct_across_round_client_slot():
+    base = jax.random.PRNGKey(3)
+    seen = set()
+    for r in (1, 2):
+        for c in (0, 1, backends.SERVER_CLIENT):
+            for s in (0, 1, backends.REPORT_EVAL_SLOT,
+                      backends.FINAL_EVAL_SLOT):
+                seen.add(tuple(np.asarray(
+                    backends.eval_key(base, r, c, s)).tolist()))
+    assert len(seen) == 2 * 3 * 4
+    # deterministic
+    np.testing.assert_array_equal(
+        np.asarray(backends.eval_key(base, 1, 0, 5)),
+        np.asarray(backends.eval_key(base, 1, 0, 5)))
+
+
+# --- end-to-end: shot noise is live and deterministic ------------------------
+def test_noisy_run_deterministic_by_seed(small_task):
+    kw = dict(method="qfl", optimizer="spsa", n_rounds=2, maxiter0=3,
+              early_stop=False, backend="fake", seed=4)
+    a = run_experiment(small_task, **kw)
+    b = run_experiment(small_task, **kw)
+    assert a.series("server_loss") == b.series("server_loss")
+    assert a.series("server_val_acc") == b.series("server_val_acc")
+    np.testing.assert_array_equal(a.theta_g, b.theta_g)
+
+
+def test_shot_sampling_changes_trajectory(small_task):
+    """shots_override=0 (channel-only ablation) must differ from the
+    default finite-shot run — i.e. sampling actually fires."""
+    kw = dict(method="qfl", optimizer="spsa", n_rounds=2, maxiter0=3,
+              early_stop=False, backend="fake", seed=4)
+    shot = run_experiment(small_task, **kw)
+    noshot = run_experiment(small_task, shots_override=0, **kw)
+    assert shot.series("server_loss") != noshot.series("server_loss")
+
+
+def test_shots_override_changes_quantization(small_task):
+    """A 10-shot run quantizes losses more coarsely than a 1000-shot
+    run; both stay finite and deterministic."""
+    kw = dict(method="qfl", optimizer="spsa", n_rounds=1, maxiter0=2,
+              early_stop=False, backend="fake", seed=4)
+    coarse = run_experiment(small_task, shots_override=10, **kw)
+    fine = run_experiment(small_task, shots_override=1000, **kw)
+    assert coarse.series("server_loss") != fine.series("server_loss")
+    for res in (coarse, fine):
+        assert all(np.isfinite(r.server_loss) for r in res.rounds)
+
+
+def test_shots_override_rejects_negative(small_task):
+    with pytest.raises(ValueError):
+        run_experiment(small_task, shots_override=-1, n_rounds=1)
+
+
+def test_accuracy_measured_through_backend(small_task):
+    """Satellite: server accuracy goes through the measurement pipeline
+    (channel + shots), so noisy-backend accuracy differs from the same
+    run evaluated exactly — the Table-I ordering is measured."""
+    kw = dict(method="qfl", optimizer="spsa", n_rounds=2, maxiter0=3,
+              early_stop=False, seed=4)
+    exact = run_experiment(small_task, backend="exact", **kw)
+    fake = run_experiment(small_task, backend="fake", **kw)
+    accs_e = exact.series("server_val_acc") + exact.series("server_test_acc")
+    accs_f = fake.series("server_val_acc") + fake.series("server_test_acc")
+    assert accs_e != accs_f
+
+
+def test_fully_depolarized_accuracy_is_chance(small_task):
+    """A depolarizing=1.0 channel erases the model: every row becomes
+    uniform, argmax degenerates to class 0, and accuracy equals the
+    class-0 rate of the split — which only happens if _acc applies the
+    channel (the old code ignored the backend entirely)."""
+    from repro.core.orchestrator import Orchestrator, RunConfig
+    orch = Orchestrator(small_task, RunConfig(method="qfl", n_rounds=1))
+    orch.backend = backends.Backend("flat", depolarizing=1.0)
+    theta = np.zeros(orch.spec.n_params)
+    acc = orch._acc(theta, small_task.val_qX, small_task.val_qy)
+    class0 = np.mean(np.asarray(small_task.val_qy) == 0)
+    assert acc == pytest.approx(float(class0))
