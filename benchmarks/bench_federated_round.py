@@ -13,27 +13,33 @@ noisy ones run keyed finite-shot sampling on the fast path, so the
 speedup/parity gate covers Table I's shot-noise setting too.  ``--smoke``
 shrinks the workload for CI; ``--engine X`` runs one engine only (for
 profiling).
+
+``--n-devices N`` forces N host devices (setting
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+initializes — a no-op if jax is already live, e.g. under the run.py
+aggregator, in which case the available device count is used) and runs
+the batched engine on an N-wide 'clients' mesh.  ``--sweep-clients
+8,16,32,64`` adds the ROADMAP scaling sweep: for each client count C the
+batched engine runs once on a single device and once on the mesh,
+reporting round wall-time vs device count.
+
+Heavy imports live inside ``main`` so the device-count flag can be set
+after argparse but before the first jax touch.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
-import numpy as np
 
-from benchmarks.common import emit, get_task
-from repro.core.orchestrator import run_experiment
-from repro.quantum.backends import BACKENDS
-
-
-def _run(task, engine: str, *, rounds: int, maxiter: int,
-         optimizer: str = "spsa", backend: str = "exact"):
-    t0 = time.perf_counter()
-    res = run_experiment(task, method="qfl", optimizer=optimizer,
-                         engine=engine, n_rounds=rounds, maxiter0=maxiter,
-                         early_stop=False, backend=backend)
-    wall = time.perf_counter() - t0
-    return wall, res
+def _force_host_devices(n: int) -> None:
+    """Best-effort: request n host devices before jax backend init."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = (cur + " " + flag).strip()
 
 
 def main(argv=()):
@@ -49,24 +55,65 @@ def main(argv=()):
                     default="both")
     ap.add_argument("--optimizer", choices=["spsa", "nelder-mead"],
                     default="spsa")
-    ap.add_argument("--backend", choices=sorted(BACKENDS),
-                    default="exact",
+    ap.add_argument("--backend", default="exact",
                     help="quantum backend; noisy ones (fake/aersim/real) "
                          "run keyed finite-shot sampling in both engines")
+    ap.add_argument("--n-devices", type=int, default=0,
+                    help="force N host devices and run the batched "
+                         "engine on an N-wide 'clients' mesh (0 = off)")
+    ap.add_argument("--sweep-clients", default="",
+                    help="comma list of client counts (e.g. 8,16,32,64): "
+                         "bench batched round time 1 device vs the mesh")
+    ap.add_argument("--train-size", type=int, default=0,
+                    help="TOTAL training examples, split across clients "
+                         "(0 = 120 smoke / 250 full); raise it with "
+                         "--sweep-clients so per-client work doesn't "
+                         "shrink as C grows")
     args = ap.parse_args(list(argv))
+
+    if args.n_devices > 1 and "jax" not in sys.modules:
+        _force_host_devices(args.n_devices)
+
+    import jax
+    import numpy as np
+
+    from benchmarks.common import emit, get_task
+    from repro.core.orchestrator import run_experiment
+    from repro.quantum.backends import BACKENDS
+
+    if args.backend not in BACKENDS:
+        ap.error(f"--backend must be one of {sorted(BACKENDS)}")
+    n_dev = args.n_devices
+    if n_dev > len(jax.devices()):
+        print(f"federated_round/_warn,,"
+              f"wanted {n_dev} devices, platform exposes "
+              f"{len(jax.devices())} (jax initialized early?) — clamping")
+        n_dev = len(jax.devices())
+
+    def _run(engine, *, rounds, maxiter, clients=args.clients,
+             devices=None):
+        task = get_task("genomic", n_clients=clients,
+                        train_size=args.train_size
+                        or (120 if args.smoke else 250))
+        t0 = time.perf_counter()
+        res = run_experiment(
+            task, method="qfl", optimizer=args.optimizer, engine=engine,
+            n_rounds=rounds, maxiter0=maxiter, early_stop=False,
+            backend=args.backend,
+            n_devices=devices if engine == "batched" else None)
+        return time.perf_counter() - t0, res
 
     rounds = args.rounds or (2 if args.smoke else 3)
     maxiter = args.maxiter or (5 if args.smoke else 25)
-    train = 120 if args.smoke else 250
-    task = get_task("genomic", n_clients=args.clients, train_size=train)
 
     t0 = time.time()
     rows = []
     results = {}
     for engine in (("sequential", "batched") if args.engine == "both"
                    else (args.engine,)):
-        wall, res = _run(task, engine, rounds=rounds, maxiter=maxiter,
-                         optimizer=args.optimizer, backend=args.backend)
+        devices = n_dev if n_dev > 1 else None
+        wall, res = _run(engine, rounds=rounds, maxiter=maxiter,
+                         devices=devices)
         results[engine] = (wall, res)
         rows.append({
             "name": f"{engine}_round_s",
@@ -75,7 +122,9 @@ def main(argv=()):
                         f"backend={args.backend} total={wall:.2f}s "
                         f"rounds={rounds} maxiter={maxiter} "
                         f"clients={args.clients} "
-                        f"final_loss={res.rounds[-1].server_loss:.6f}")})
+                        + (f"n_devices={devices} "
+                           if engine == "batched" and devices else "")
+                        + f"final_loss={res.rounds[-1].server_loss:.6f}")})
 
     if len(results) == 2:
         w_seq, r_seq = results["sequential"]
@@ -92,16 +141,37 @@ def main(argv=()):
         # so a second run isolates steady-state round wall-time (the
         # sequential path has no warm state — it re-traces every round
         # by construction, which is precisely its bottleneck)
-        w_warm, _ = _run(task, "batched", rounds=rounds, maxiter=maxiter,
-                         optimizer=args.optimizer, backend=args.backend)
+        w_warm, _ = _run("batched", rounds=rounds, maxiter=maxiter,
+                         devices=n_dev if n_dev > 1 else None)
         rows.append({
             "name": "batched_warm_round_s",
             "value": f"{w_warm / rounds:.3f}",
             "derived": (f"speedup_vs_seq_round="
                         f"{w_seq / w_warm:.1f}x total={w_warm:.2f}s")})
+
+    if args.sweep_clients:
+        # ROADMAP scaling sweep: batched round wall-time vs device count
+        # at growing client counts.  Cold+warm per point; the warm number
+        # is the steady-state round time the mesh is judged on.
+        sweep = [int(c) for c in args.sweep_clients.split(",") if c]
+        mesh_w = n_dev if n_dev > 1 else len(jax.devices())
+        for C in sweep:
+            for devices in (None, mesh_w) if mesh_w > 1 else (None,):
+                _run("batched", rounds=1, maxiter=maxiter, clients=C,
+                     devices=devices)                        # compile
+                wall, res = _run("batched", rounds=rounds,
+                                 maxiter=maxiter, clients=C,
+                                 devices=devices)            # warm
+                d = devices or 1
+                rows.append({
+                    "name": f"sweep_c{C}_d{d}_round_s",
+                    "value": f"{wall / rounds:.3f}",
+                    "derived": (f"clients={C} n_devices={d} warm "
+                                f"optimizer={args.optimizer} "
+                                f"final_loss="
+                                f"{res.rounds[-1].server_loss:.6f}")})
     emit("federated_round", rows, t0=t0)
 
 
 if __name__ == "__main__":
-    import sys
     main(sys.argv[1:])

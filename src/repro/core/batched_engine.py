@@ -64,6 +64,52 @@ The sequential path remains the parity reference for both optimizers:
 branch decisions, trajectories, and eval counts of the batched
 Nelder–Mead match ``gradfree.nm_run`` decision-for-decision
 (``tests/test_batched_nm.py`` / ``tests/test_batched_engine.py``).
+
+Sharding-safety invariants (the 'clients' mesh axis)
+----------------------------------------------------
+With ``n_devices > 1`` the engine lays its ``(C, …)`` stacks across a
+1-D ``'clients'`` device mesh (``distributed/sharding.py``) and lets the
+jitted round program partition by computation-follows-data.  This is
+safe because the round program preserves two invariants that sharding
+relies on — keep them when editing this module or the batched
+optimizers:
+
+  1. **Per-client independence until aggregation.**  Nothing inside
+     ``round_fn`` reduces, gathers, or permutes across the client axis;
+     every op is elementwise or batched along ``C`` (the one exception,
+     ``max(iters)`` for the shared loop bound, is a scalar all-reduce
+     before the loop starts).  Each device therefore advances its slice
+     of clients through the full NM/SPSA inner loop with zero
+     cross-device collectives; the only cross-client mixing is the
+     orchestrator's host-side weighted aggregation after ``run_round``
+     returns.
+  2. **Key folding is position-, not order-, dependent.**  Client
+     ``c``'s round key is ``fold_in(fold_in(base, round), c)`` — a pure
+     function of the client *id*, never of evaluation order or of which
+     device holds the shard.  Sharding (or padding) the client axis
+     must not renumber clients: real clients keep ids ``0..C-1`` and
+     padding rows are appended after them, so every real client draws
+     the same shots wherever it lands.
+
+Ragged client counts are padded (``sharding.pad_client_count``) with
+**inert** clients — all-zero masks, zero iteration budgets, uniform
+teacher rows — and sliced off the outputs; the masked-mean denominator
+is clamped to 1 so an all-padding client stays finite (bitwise inert
+for real clients, whose mask sum is always >= 1).  With one device (or
+``n_devices=None``) nothing is padded or placed and behavior is
+identical to PR 1–3.
+
+What "parity" means for the sharded round: the key draws are identical
+by construction (invariant 2), and every client's program is the same
+math — but XLA re-vectorizes within-client reductions for the
+per-shard leading dim, which can shift noiseless f32 sums by
+arithmetic-order noise (~2e-7, the same class as the documented
+tape-vs-eager gap).  Paths that quantize — the NM branch ladder,
+finite-shot sampling — absorb it, so sharded == single-device
+**bitwise** at pinned seeds for Nelder–Mead and for ``shots > 0``
+runs; noiseless SPSA (whose update consumes raw f differences) agrees
+to ~1e-6 with identical draw/eval/branch accounting
+(``tests/test_client_sharding.py`` pins each cell of that matrix).
 """
 from __future__ import annotations
 
@@ -73,6 +119,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as shd
 from repro.optim.batched_nm import batched_nm, best_point
 from repro.optim.batched_spsa import batched_spsa, make_deltas
 from repro.quantum import tape as tape_mod
@@ -104,7 +151,10 @@ def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool,
                 probs, jax.random.fold_in(ckey, slot))
         else:
             noisy = backend.apply_channel(probs)
-        m_sum = jnp.sum(mc)
+        # clamp: all-padding clients (ragged C on a mesh) have Σmask = 0
+        # and must stay finite; real clients have Σmask >= 1, for which
+        # the maximum is bitwise inert
+        m_sum = jnp.maximum(jnp.sum(mc), 1.0)
         p = jnp.take_along_axis(noisy, yc[:, None], axis=1)[:, 0]
         loss = -jnp.sum(jnp.log(p + eps) * mc) / m_sum  # masked NLL
         if use_llm and lam > 0:
@@ -180,15 +230,25 @@ class BatchedRoundEngine:
     def __init__(self, task, spec, backend, *, lam: float, mu: float,
                  use_llm: bool, teacher_probs: Optional[List] = None,
                  seeds: Sequence[int] = (), max_iter: int = 100,
-                 optimizer: str = "spsa", seed: int = 0):
+                 optimizer: str = "spsa", seed: int = 0,
+                 n_devices: Optional[int] = None):
         C = task.n_clients
         n_cls = task.n_classes
         b_max = max(cl.n for cl in task.clients)
 
-        qX = np.zeros((C, b_max, spec.n_qubits), np.float32)
-        qy = np.zeros((C, b_max), np.int32)
-        mask = np.zeros((C, b_max), np.float32)
-        teacher = np.full((C, b_max, n_cls), 1.0 / n_cls, np.float32)
+        # 'clients' mesh: shard the stacks' leading axis across devices
+        # (see the module docstring's sharding-safety invariants); one
+        # device (the default) skips padding and placement entirely.
+        self._mesh = None
+        c_pad = C
+        if n_devices is not None and int(n_devices) > 1:
+            self._mesh = shd.client_mesh(int(n_devices))
+            c_pad = shd.pad_client_count(C, int(n_devices))
+
+        qX = np.zeros((c_pad, b_max, spec.n_qubits), np.float32)
+        qy = np.zeros((c_pad, b_max), np.int32)
+        mask = np.zeros((c_pad, b_max), np.float32)
+        teacher = np.full((c_pad, b_max, n_cls), 1.0 / n_cls, np.float32)
         for i, cl in enumerate(task.clients):
             qX[i, :cl.n] = cl.qX
             qy[i, :cl.n] = cl.qy
@@ -200,8 +260,12 @@ class BatchedRoundEngine:
         self._mask, self._teacher = jnp.asarray(mask), jnp.asarray(teacher)
         self._optimizer = optimizer
         if optimizer == "spsa":
-            self._deltas = jnp.asarray(
-                make_deltas(seeds, max_iter, spec.n_params), jnp.float32)
+            # padding clients never update (zero budgets) but their delta
+            # rows are still indexed every masked iteration — keep them
+            # valid Rademacher signs, not zeros (0 ⇒ 1/δ = inf)
+            deltas = np.ones((c_pad, max_iter, spec.n_params), np.float64)
+            deltas[:C] = make_deltas(seeds, max_iter, spec.n_params)
+            self._deltas = jnp.asarray(deltas, jnp.float32)
         else:
             self._deltas = None        # NM is deterministic — no draws
         # sequential-path evals spent before the metered run: spsa_init
@@ -211,6 +275,16 @@ class BatchedRoundEngine:
         # per run_round, fold_in(slot) inside the optimizers
         self._base_key = jax.random.PRNGKey(seed)
         self._n_clients = C
+        self._c_pad = c_pad
+        if self._mesh is not None:
+            stacks = (self._qX, self._qy, self._mask, self._teacher)
+            if self._deltas is not None:
+                stacks = stacks + (self._deltas,)
+            placed = shd.put_client_stacks(self._mesh, stacks, c_pad)
+            (self._qX, self._qy, self._mask, self._teacher,
+             *rest) = placed
+            if rest:
+                self._deltas = rest[0]
         self._round = get_round_fn(spec, backend, lam=lam, mu=mu,
                                    use_llm=use_llm, optimizer=optimizer,
                                    max_iter=max_iter)
@@ -225,15 +299,31 @@ class BatchedRoundEngine:
         per-client parameters and the sequential-equivalent evaluation
         counts (``init_evals`` + the metered run's branch-dependent spend)
         for comm accounting.
+
+        On a client mesh the per-round inputs are placed like the
+        stacks (budgets/keys along 'clients', θ_g replicated) and the
+        padding rows — zero budgets, key ids ``C..c_pad-1`` that fold
+        *after* every real client's id — are sliced off the outputs.
         """
         rk = jax.random.fold_in(self._base_key, round_idx)
         ckeys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
-            rk, jnp.arange(self._n_clients))
+            rk, jnp.arange(self._c_pad))
+        iters = np.zeros((self._c_pad,), np.int32)
+        iters[:self._n_clients] = np.asarray(maxiters, np.int32)
+        theta_g = jnp.asarray(theta_g, jnp.float32)
+        iters = jnp.asarray(iters)
+        if self._mesh is not None:
+            # θ_g is replicated explicitly: its leading dim (n_params)
+            # must never be mistaken for a client axis by shape inference
+            theta_g = shd.put_replicated(self._mesh, theta_g)
+            iters, ckeys = shd.put_client_stacks(
+                self._mesh, (iters, ckeys), self._c_pad)
         args = [self._qX, self._qy, self._mask, self._teacher,
-                jnp.asarray(theta_g, jnp.float32),
-                jnp.asarray(np.asarray(maxiters, np.int32))]
+                theta_g, iters]
         if self._optimizer == "spsa":
             args.append(self._deltas)
         args.append(ckeys)
         x, n_evals = self._round(*args)
-        return np.asarray(x, np.float64), np.asarray(n_evals, np.int64)
+        C = self._n_clients
+        return (np.asarray(x, np.float64)[:C],
+                np.asarray(n_evals, np.int64)[:C])

@@ -55,6 +55,9 @@ class RunConfig:
     mu: float = 0.01                   # µ prox weight (Eq. 6)
     optimizer: str = "nelder-mead"     # | "spsa"
     engine: str = "sequential"         # | "batched" (one jitted round prog)
+    n_devices: Optional[int] = None    # 'clients' mesh width for the
+                                       # batched engine (None/1 = single
+                                       # device, the parity reference)
     backend: str = "exact"
     shots_override: Optional[int] = None   # replace the backend's shots
                                            # (0 = channel-only ablation)
@@ -108,6 +111,12 @@ class Orchestrator:
         self.rc = rc
         if rc.engine not in ("sequential", "batched"):
             raise ValueError(f"unknown engine {rc.engine!r}")
+        if rc.n_devices is not None and rc.n_devices > 1 \
+                and rc.engine != "batched":
+            raise ValueError(
+                "n_devices > 1 shards the batched engine's client axis; "
+                "the sequential engine is single-device — use "
+                "engine='batched'")
         kind = rc.qnn_kind or ("vqc" if task.n_classes == 2 else "qcnn")
         feat_dim = int(task.clients[0].qX.shape[1])
         if feat_dim != rc.n_qubits:
@@ -234,7 +243,8 @@ class Orchestrator:
                 use_llm=rc.uses_llm, teacher_probs=self._teacher_probs,
                 seeds=[rc.seed * 997 + i for i in range(task.n_clients)],
                 max_iter=max(rc.maxiter_cap, rc.maxiter0),
-                optimizer=rc.optimizer, seed=rc.seed)
+                optimizer=rc.optimizer, seed=rc.seed,
+                n_devices=rc.n_devices)
 
         maxiters = [rc.maxiter0] * task.n_clients
         last_losses = [float("inf")] * task.n_clients

@@ -1,6 +1,16 @@
 """GSPMD sharding rules: FSDP along 'data', tensor-parallel along 'model',
 pure data-parallel along 'pod' (DCN).  Rules are keyed by parameter leaf
 name (we own every name; see models/*).
+
+The quantum federated fast path adds a fourth axis, ``'clients'``: the
+batched round engine's ``(C, …)`` client stacks are embarrassingly
+parallel along their leading dimension (per-client independence until
+the host-side aggregation — see ``core/batched_engine.py``), so the
+``client_*`` helpers below shard exactly that axis across a 1-D device
+mesh and replicate everything else.  Client counts that do not divide
+the mesh are handled by **explicit padding** (``pad_client_count``) —
+``put_client_stacks`` refuses ragged placement rather than silently
+resharding.
 """
 from __future__ import annotations
 
@@ -8,10 +18,12 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 FSDP = "data"
 TP = "model"
+CLIENTS = "clients"
 
 # leaf name -> (in_axis, out_axis) for 2D weights (stacked group dim prepended
 # automatically).  None = replicated on that dim.
@@ -265,3 +277,84 @@ def head_axis_choice(KH: int, G: int) -> tuple:
 def named(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# 'clients' axis — the batched federated round engine's mesh dimension
+# ---------------------------------------------------------------------------
+def client_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D mesh over the first ``n_devices`` local devices, axis
+    ``'clients'``.  ``None`` → all visible devices.  Raises when more
+    devices are requested than the platform exposes (force host devices
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n}")
+    if n > len(devs):
+        raise ValueError(
+            f"client mesh wants {n} devices but only {len(devs)} are "
+            f"visible; set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={n} (before jax initializes) or lower n_devices")
+    return Mesh(np.asarray(devs[:n]), (CLIENTS,))
+
+
+def pad_client_count(n_clients: int, n_shards: int) -> int:
+    """Smallest multiple of ``n_shards`` that is >= ``n_clients`` — the
+    padded leading dim of the client stacks.  Padding clients are inert:
+    all-zero masks and zero iteration budgets (see the engine's padding
+    contract), so they never contribute to losses or aggregation."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return -(-int(n_clients) // int(n_shards)) * int(n_shards)
+
+
+def check_client_divisibility(n_clients: int, n_shards: int) -> None:
+    """Ragged client axes are an error, not an implicit reshard: pad
+    first with ``pad_client_count`` (the engine does this at
+    construction) or shrink the mesh."""
+    if n_clients % n_shards != 0:
+        raise ValueError(
+            f"client axis of size {n_clients} does not divide across "
+            f"{n_shards} mesh shards; pad to "
+            f"{pad_client_count(n_clients, n_shards)} with inert clients "
+            f"(pad_client_count) or use a mesh whose 'clients' axis "
+            f"divides {n_clients}")
+
+
+def client_stack_spec(ndim: int) -> P:
+    """Spec for a client-stacked array: leading dim on 'clients', the
+    rest replicated — (C, Bmax, F) → P('clients', None, None), etc."""
+    if ndim < 1:
+        return P()
+    return P(CLIENTS, *((None,) * (ndim - 1)))
+
+
+def client_specs(arrays, n_clients: int):
+    """Spec tree for a pytree of engine inputs: leaves whose leading dim
+    equals ``n_clients`` ride the 'clients' axis, everything else (θ_g,
+    scalars) is replicated."""
+    def leaf(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == n_clients:
+            return client_stack_spec(x.ndim)
+        return P()
+    return jax.tree.map(leaf, arrays)
+
+
+def put_replicated(mesh: Mesh, x):
+    """Explicitly replicate an array on every mesh device — for inputs
+    like θ_g whose leading dim could coincidentally equal the padded
+    client count (shape inference must never shard them)."""
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+def put_client_stacks(mesh: Mesh, arrays, n_clients: int):
+    """Place a pytree of engine inputs on ``mesh``: client-stacked leaves
+    sharded along 'clients', the rest replicated.  The jitted round
+    program then partitions along the client axis by computation-follows-
+    data — no in_shardings plumbing at every call site."""
+    check_client_divisibility(n_clients, mesh.shape[CLIENTS])
+    specs = client_specs(arrays, n_clients)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        arrays, specs)

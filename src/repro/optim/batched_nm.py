@@ -35,6 +35,18 @@ init row ``r`` → slot ``r``; iteration ``i``'s speculative candidates
 evaluated speculatively (here) or lazily (``gradfree.nm_run``), so the
 draws of every candidate the sequential path *does* evaluate match
 bitwise and the branch ladder decides identically.
+
+Sharding safety: this optimizer is what runs under the engine's
+``'clients'`` mesh axis, so two invariants are load-bearing (see
+``core/batched_engine.py``):  every op in ``body`` must stay
+**per-client independent** — elementwise or batched along ``C``, no
+reduction/gather/permute across the client axis (``argsort`` and
+``take_along_axis`` act on axis 1, within one client's simplex; the
+scalar ``max(iters)`` loop bound is the single pre-loop exception) —
+and the keyed slot schedule must stay a pure function of the
+evaluation's **structural position**, never of client order or shard
+placement.  Break either and the sharded round stops being bitwise
+the single-device round.
 """
 from __future__ import annotations
 

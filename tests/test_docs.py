@@ -1,0 +1,53 @@
+"""Doc-freshness guards: the README and architecture page must exist and
+must not drift from the repo's operational ground truth (ROADMAP's tier-1
+command, the key-derivation contract, the engine matrix).  CI runs this
+file as an explicit step so a missing/stale README fails loudly, not
+just as one line in the tier-1 tally.
+"""
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+README = ROOT / "README.md"
+ARCH = ROOT / "docs" / "ARCHITECTURE.md"
+ROADMAP = ROOT / "ROADMAP.md"
+
+
+def _tier1_command() -> str:
+    """The canonical tier-1 command, parsed from ROADMAP.md (the single
+    source of truth): the first backtick span after 'Tier-1 verify:'."""
+    text = ROADMAP.read_text()
+    m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", text)
+    assert m, "ROADMAP.md lost its '**Tier-1 verify:** `...`' line"
+    return m.group(1)
+
+
+def test_readme_exists():
+    assert README.is_file(), "top-level README.md is missing"
+
+
+def test_readme_tier1_command_matches_roadmap():
+    """The verify command in the README must be ROADMAP's, verbatim —
+    if one changes, change both (this is the drift guard)."""
+    cmd = _tier1_command()
+    assert cmd in README.read_text(), (
+        f"README.md does not contain the tier-1 command from ROADMAP.md: "
+        f"{cmd!r}")
+
+
+def test_readme_covers_the_engine_matrix():
+    text = README.read_text()
+    for needle in ("sequential", "batched", "exact", "fake",
+                   "benchmarks", 'pip install -e ".[test]"'):
+        assert needle in text, f"README.md lost its {needle!r} section"
+
+
+def test_architecture_page_documents_the_contracts():
+    assert ARCH.is_file(), "docs/ARCHITECTURE.md is missing"
+    text = ARCH.read_text()
+    # the eval-key slot contract must be documented outside CHANGES.md
+    assert "eval_key" in text
+    assert re.search(r"slot", text, re.I)
+    # the round pipeline map and the clients mesh axis
+    for needle in ("tape", "clients", "shard", "aggregation"):
+        assert needle in text, f"ARCHITECTURE.md lost its {needle!r} part"
