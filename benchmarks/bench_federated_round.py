@@ -29,17 +29,10 @@ after argparse but before the first jax touch.
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import time
 
-
-def _force_host_devices(n: int) -> None:
-    """Best-effort: request n host devices before jax backend init."""
-    flag = f"--xla_force_host_platform_device_count={n}"
-    cur = os.environ.get("XLA_FLAGS", "")
-    if "xla_force_host_platform_device_count" not in cur:
-        os.environ["XLA_FLAGS"] = (cur + " " + flag).strip()
+from benchmarks.hostdev import clamp_to_visible, force_host_devices
 
 
 def main(argv=()):
@@ -64,6 +57,10 @@ def main(argv=()):
     ap.add_argument("--sweep-clients", default="",
                     help="comma list of client counts (e.g. 8,16,32,64): "
                          "bench batched round time 1 device vs the mesh")
+    ap.add_argument("--sweep-qubits", default="",
+                    help="comma list of qubit counts (e.g. 4,6,8,10): "
+                         "qubit-scaling sweep through the batched engine "
+                         "(statevector cost doubles per qubit)")
     ap.add_argument("--train-size", type=int, default=0,
                     help="TOTAL training examples, split across clients "
                          "(0 = 120 smoke / 250 full); raise it with "
@@ -72,7 +69,7 @@ def main(argv=()):
     args = ap.parse_args(list(argv))
 
     if args.n_devices > 1 and "jax" not in sys.modules:
-        _force_host_devices(args.n_devices)
+        force_host_devices(args.n_devices)
 
     import jax
     import numpy as np
@@ -83,23 +80,20 @@ def main(argv=()):
 
     if args.backend not in BACKENDS:
         ap.error(f"--backend must be one of {sorted(BACKENDS)}")
-    n_dev = args.n_devices
-    if n_dev > len(jax.devices()):
-        print(f"federated_round/_warn,,"
-              f"wanted {n_dev} devices, platform exposes "
-              f"{len(jax.devices())} (jax initialized early?) — clamping")
-        n_dev = len(jax.devices())
+    n_dev = clamp_to_visible(args.n_devices, "federated_round")
 
     def _run(engine, *, rounds, maxiter, clients=args.clients,
-             devices=None):
+             devices=None, n_qubits=4):
         task = get_task("genomic", n_clients=clients,
                         train_size=args.train_size
-                        or (120 if args.smoke else 250))
+                        or (120 if args.smoke else 250),
+                        **({"n_features": n_qubits} if n_qubits != 4
+                           else {}))
         t0 = time.perf_counter()
         res = run_experiment(
             task, method="qfl", optimizer=args.optimizer, engine=engine,
             n_rounds=rounds, maxiter0=maxiter, early_stop=False,
-            backend=args.backend,
+            backend=args.backend, n_qubits=n_qubits,
             n_devices=devices if engine == "batched" else None)
         return time.perf_counter() - t0, res
 
@@ -170,6 +164,26 @@ def main(argv=()):
                                 f"optimizer={args.optimizer} "
                                 f"final_loss="
                                 f"{res.rounds[-1].server_loss:.6f}")})
+
+    if args.sweep_qubits:
+        # ROADMAP scale-knobs sweep: statevector cost doubles per qubit,
+        # so this is where the tape executor's kernel choices show up.
+        # Batched engine only (the scaling target); cold+warm per point.
+        qsweep = [int(q) for q in args.sweep_qubits.split(",") if q]
+        devices = n_dev if n_dev > 1 else None
+        for q in qsweep:
+            _run("batched", rounds=1, maxiter=maxiter,
+                 devices=devices, n_qubits=q)                 # compile
+            wall, res = _run("batched", rounds=rounds, maxiter=maxiter,
+                             devices=devices, n_qubits=q)     # warm
+            rows.append({
+                "name": f"sweep_q{q}_round_s",
+                "value": f"{wall / rounds:.3f}",
+                "derived": (f"n_qubits={q} warm "
+                            f"n_devices={devices or 1} "
+                            f"optimizer={args.optimizer} "
+                            f"final_loss="
+                            f"{res.rounds[-1].server_loss:.6f}")})
     emit("federated_round", rows, t0=t0)
 
 

@@ -7,6 +7,10 @@ Public API:
     termination.TerminationCriterion           — early stopping
     distill.kl_divergence / make_client_objective
     llm_client.LLMClient                       — per-client LLM fine-tuning
+                                                 (sequential parity reference)
+    batched_llm.BatchedLLMEngine               — the fine-tuning stage as one
+                                                 jitted, mesh-shardable program
 """
-from repro.core import distill, llm_client, regulation, selection, termination  # noqa: F401
+from repro.core import (batched_llm, distill, llm_client, regulation,  # noqa: F401
+                        selection, termination)
 from repro.core.orchestrator import Orchestrator, RunConfig, RunResult, run_experiment  # noqa: F401

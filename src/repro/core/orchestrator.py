@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distill, regulation, selection
-from repro.core.llm_client import LLMClient, distill_to_global, task_llm_config
+from repro.core.llm_client import run_sequential_stage, task_llm_config
 from repro.core.termination import TerminationCriterion
 from repro.data.tasks import FederatedTask
 from repro.optim.gradfree import GradFreeOptimizer
@@ -194,28 +194,42 @@ class Orchestrator:
 
     # -- Step 1: LLM fine-tuning (round 1 only) -------------------------------
     def _llm_round(self):
+        """Fine-tune every client's LoRA adapters, distill toward the
+        FedAvg teacher, and collect the regulation losses / soft labels.
+
+        Engine dispatch mirrors the quantum round: ``engine="batched"``
+        runs the whole stage as one jitted device program
+        (``core/batched_llm.BatchedLLMEngine`` — stacked adapters,
+        vmapped train steps, on-device distill/evals, optionally sharded
+        over the 'clients' mesh); ``engine="sequential"`` is the
+        per-client parity reference.  Both draw minibatches under the
+        ``llm_client.llm_key(llm_root(seed), client, step)`` contract,
+        so the two paths are draw-for-draw identical.
+        """
         rc, task = self.rc, self.task
         t0 = time.time()
         cfg = task_llm_config(rc.llm_name, task.vocab_size, task.llm_seq_len)
         from repro.models import model as M
         self._key, k0 = jax.random.split(self._key)
         base = M.init_params(cfg, k0, dtype=jnp.float32)
-        self.llm_clients = []
-        for i in range(task.n_clients):
-            self._key, k = jax.random.split(self._key)
-            cl = LLMClient(cfg, base, k, n_labels=task.n_classes,
-                           lr=rc.llm_lr)
-            cl.fine_tune(task.clients[i].llm_batch, steps=rc.llm_steps)
-            self.llm_clients.append(cl)
-        distill_to_global(self.llm_clients, task.weights,
-                          rho=rc.distill_rho)
-        self._llm_losses = [cl.eval_loss(task.clients[i].llm_batch)
-                            for i, cl in enumerate(self.llm_clients)]
-        self._llm_f1 = [cl.f1(task.clients[i].llm_batch)
-                        for i, cl in enumerate(self.llm_clients)]
-        self._teacher_probs = [
-            cl.teacher_probs(task.clients[i].llm_batch)
-            for i, cl in enumerate(self.llm_clients)]
+        if rc.engine == "batched":
+            from repro.core.batched_llm import BatchedLLMEngine
+            self.llm_clients = None     # per-client wrappers exist only
+                                        # on the sequential path
+            self._llm_engine = BatchedLLMEngine(
+                task, cfg, base, seed=rc.seed, lr=rc.llm_lr,
+                steps=rc.llm_steps, rho=rc.distill_rho,
+                n_devices=rc.n_devices)
+            out = self._llm_engine.run()
+            self._llm_losses = [float(x) for x in out.losses]
+            self._llm_f1 = [float(x) for x in out.f1]
+            self._teacher_probs = self._llm_engine.teacher_probs_list(
+                task, out.teacher)
+        else:
+            (self.llm_clients, self._llm_losses, self._llm_f1,
+             self._teacher_probs) = run_sequential_stage(
+                task, cfg, base, seed=rc.seed, lr=rc.llm_lr,
+                steps=rc.llm_steps, rho=rc.distill_rho)
         return time.time() - t0
 
     # -- main loop -------------------------------------------------------------

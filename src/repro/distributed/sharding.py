@@ -341,11 +341,43 @@ def client_specs(arrays, n_clients: int):
     return jax.tree.map(leaf, arrays)
 
 
+def client_tree_specs(tree, n_clients: int):
+    """Spec tree for a **client-stacked pytree** — LoRA adapter stacks,
+    vmapped AdamW states: every array leaf must carry the client axis
+    leading (``(C, …)``), and a leaf that does not is an error, not a
+    silent replication.  (``client_specs`` is the permissive variant for
+    mixed input bundles where θ_g-like leaves are legitimately
+    replicated; for an adapter stack a non-client leaf means someone
+    forgot to vmap the init.)"""
+    def leaf(x):
+        if getattr(x, "ndim", 0) < 1 or x.shape[0] != n_clients:
+            raise ValueError(
+                f"client-stacked pytree leaf has shape "
+                f"{getattr(x, 'shape', ())}, expected leading dim "
+                f"{n_clients}; stack per-client state with jax.vmap "
+                f"before placement")
+        return client_stack_spec(x.ndim)
+    return jax.tree.map(leaf, tree)
+
+
+def put_client_tree(mesh: Mesh, tree, n_clients: int):
+    """Place a client-stacked pytree (adapters / optimizer states) on the
+    'clients' mesh — strict: every leaf sharded along its leading client
+    axis (``client_tree_specs``)."""
+    check_client_divisibility(n_clients, mesh.shape[CLIENTS])
+    specs = client_tree_specs(tree, n_clients)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, specs)
+
+
 def put_replicated(mesh: Mesh, x):
-    """Explicitly replicate an array on every mesh device — for inputs
-    like θ_g whose leading dim could coincidentally equal the padded
-    client count (shape inference must never shard them)."""
-    return jax.device_put(x, NamedSharding(mesh, P()))
+    """Explicitly replicate an array (or pytree — e.g. the frozen LLM
+    base) on every mesh device — for inputs like θ_g whose leading dim
+    could coincidentally equal the padded client count (shape inference
+    must never shard them)."""
+    return jax.tree.map(
+        lambda v: jax.device_put(v, NamedSharding(mesh, P())), x)
 
 
 def put_client_stacks(mesh: Mesh, arrays, n_clients: int):

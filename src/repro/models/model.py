@@ -271,6 +271,17 @@ def logits_last(cfg, params, hidden):
 def make_train_step(cfg: ModelConfig, *, n_microbatches: int = 1,
                     lr: float = 1e-4, opts: FwdOptions = FwdOptions(),
                     loss_chunk: int = 512):
+    """Pure ``(params, adapters, opt_state, batch) → (adapters, opt_state,
+    metrics)`` LoRA step.
+
+    The returned function is **vmap/scan-composable**: it closes over
+    static config only, touches no host state, and every internal op is
+    batchable — so the batched LLM engine (``core/batched_llm.py``) can
+    run ``lax.scan`` over steps of ``jax.vmap(step, in_axes=(None, 0, 0,
+    0))`` with the frozen base replicated and ``(C, …)`` adapter/AdamW
+    stacks on the leading client axis.  Keep it that way: no Python side
+    effects, no data-dependent Python control flow, no host callbacks.
+    """
     def loss_fn(adapters, params, mb):
         hidden, balance, _ = forward(cfg, params, adapters, mb, opts)
         loss = chunked_ce(cfg, params, hidden, mb["labels"],
@@ -317,6 +328,30 @@ def make_train_step(cfg: ModelConfig, *, n_microbatches: int = 1,
         return new_adapters, new_opt, {"loss": loss, "grad_norm": gnorm}
 
     return train_step
+
+
+# One jitted train step per static config, shared across every consumer:
+# each LLMClient used to jit its own make_train_step closure, so C
+# federated clients paid C identical compiles of the same program.
+_TRAIN_STEP_CACHE: dict = {}
+
+
+def get_train_step(cfg: ModelConfig, *, n_microbatches: int = 1,
+                   lr: float = 1e-4, opts: FwdOptions = FwdOptions(),
+                   loss_chunk: int = 512):
+    """Module-cached ``jax.jit(make_train_step(...))``.
+
+    Keyed by the full static configuration (``ModelConfig`` and
+    ``FwdOptions`` are frozen dataclasses, hence hashable), so instances
+    with the same config share one compilation; jax's own cache then
+    specializes per input shape as usual.
+    """
+    key = (cfg, int(n_microbatches), float(lr), opts, int(loss_chunk))
+    if key not in _TRAIN_STEP_CACHE:
+        _TRAIN_STEP_CACHE[key] = jax.jit(make_train_step(
+            cfg, n_microbatches=n_microbatches, lr=lr, opts=opts,
+            loss_chunk=loss_chunk))
+    return _TRAIN_STEP_CACHE[key]
 
 
 # ---------------------------------------------------------------------------

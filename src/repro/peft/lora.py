@@ -64,6 +64,38 @@ def adapter_param_count(adapters) -> int:
 
 
 # ---------------------------------------------------------------------------
+# federated adapter algebra (FedAvg teacher + distillation blend)
+# ---------------------------------------------------------------------------
+def weighted_average_stacked(stacked, weights: jnp.ndarray):
+    """FedAvg over a client-stacked adapter pytree.
+
+    ``stacked`` holds ``(C, …)`` leaves (client axis leading); ``weights``
+    is ``(C,)`` and is normalized here, so padding clients contribute
+    nothing when their weight is 0.  Runs on device — under the
+    ``'clients'`` mesh this is the one cross-client reduction of the LLM
+    round program (GSPMD lowers it to a single all-reduce).
+    """
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+
+    def leaf(x):
+        wx = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(wx * x, axis=0)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def blend_adapters(adapters, a_g, rho: float):
+    """Distill toward the global teacher: a ← (1−ρ)·a + ρ·a_g.
+
+    Works for one client's pytree or for a client-stacked pytree (a_g
+    broadcasts along the leading client axis).
+    """
+    return jax.tree.map(
+        lambda a, g: (1.0 - rho) * a + rho * g, adapters, a_g)
+
+
+# ---------------------------------------------------------------------------
 # QLoRA int4 blockwise quantization
 # ---------------------------------------------------------------------------
 QBLOCK = 64

@@ -155,12 +155,21 @@ def sample_counts(key, probs: jnp.ndarray, shots: int) -> jnp.ndarray:
     Degenerate rows with (numerically) zero mass — all entries clipped
     to 0 — fall back to the uniform distribution instead of dumping
     every shot into class ``C-1`` via the clamped ``searchsorted``.
+    **NaN rows are not degenerate — they are diverged**: their counts
+    come back all-NaN so the client's loss stays NaN and
+    ``selection.py``'s +inf hardening sorts it last, instead of the
+    uniform fallback laundering divergence into a plausible finite
+    loss.  (The NaN row is sampled internally as uniform so every other
+    row consumes exactly the same draws — finite rows are bitwise
+    unchanged by the overwrite, preserving the pinned parity seeds.)
     Counts are returned in ``probs.dtype`` but accumulated in float32:
     scatter-adding in a low-precision dtype would saturate (bfloat16
     stops incrementing at 256) and silently lose shots.
     """
     B, C = probs.shape
+    nan_row = jnp.any(jnp.isnan(probs), axis=-1, keepdims=True)  # (B, 1)
     p = jnp.clip(probs, 0.0, 1.0)
+    p = jnp.where(nan_row, jnp.ones_like(p) / C, p)   # draw-stable stand-in
     mass = jnp.sum(p, axis=-1, keepdims=True)
     p = jnp.where(mass > 1e-12, p, jnp.ones_like(p) / C)
     cdf = jnp.cumsum(p, axis=-1)                               # (B, C)
@@ -174,6 +183,7 @@ def sample_counts(key, probs: jnp.ndarray, shots: int) -> jnp.ndarray:
     draws = jnp.minimum(draws, C - 1)      # cumsum rounding below 1.0
     counts = jnp.zeros((B, C), jnp.float32)
     counts = counts.at[jnp.arange(B)[None, :], draws].add(1.0)
+    counts = jnp.where(nan_row, jnp.nan, counts)      # divergence surfaces
     return counts.astype(probs.dtype)
 
 

@@ -1,0 +1,319 @@
+"""Batched LLM fine-tuning engine: draw-for-draw sequential parity, the
+ragged-pad contract, the on-device FedAvg/distill algebra, and 'clients'
+mesh parity for the LLM stage (alongside ``test_client_sharding.py``).
+
+The contract under test (``core/llm_client.py`` docstring): every draw
+derives from ``llm_key(llm_root(seed), client, step)`` and
+``sample_minibatch_idx`` is a pure function of (key, shard size), so the
+batched engine's vmapped draws are bitwise the sequential wrapper's —
+fine-tuned adapters and downstream evals then agree to fp32
+arithmetic-order noise only.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import llm_client as llmc
+from repro.core.batched_llm import BatchedLLMEngine
+from repro.core.llm_client import run_sequential_stage, task_llm_config
+from repro.data.tasks import build_task
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.peft import lora as lora_mod
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+STEPS = 6
+
+
+@pytest.fixture(scope="module")
+def task():
+    # n=17/16/16 across 3 clients: ragged example counts exercise the
+    # (C, Nmax, L) pad
+    return build_task("genomic", n_clients=3, train_size=49, test_size=16,
+                      val_size=16, seed=3)
+
+
+@pytest.fixture(scope="module")
+def setup(task):
+    cfg = task_llm_config("tiny-llm", task.vocab_size, task.llm_seq_len)
+    base = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, base
+
+
+@pytest.fixture(scope="module")
+def seq_ref(task, setup):
+    cfg, base = setup
+    return run_sequential_stage(task, cfg, base, seed=11, steps=STEPS)
+
+
+@pytest.fixture(scope="module")
+def bat_ref(task, setup):
+    cfg, base = setup
+    eng = BatchedLLMEngine(task, cfg, base, seed=11, steps=STEPS)
+    return eng, eng.run()
+
+
+# --- the key contract: draws are bitwise identical across engines ------------
+def test_minibatch_draws_bitwise_vmapped_vs_sequential():
+    root = llmc.llm_root(5)
+    ns = jnp.asarray([17, 16, 3])          # ragged shard sizes, one < bs
+    bs = 16
+    step = 4
+    seq = [llmc.sample_minibatch_idx(llmc.llm_key(root, c, step),
+                                     int(ns[c]), bs) for c in range(3)]
+    ckeys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        root, jnp.arange(3))
+    keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(ckeys, step)
+    bat = jax.vmap(llmc.sample_minibatch_idx, in_axes=(0, 0, None))(
+        keys, ns, bs)
+    for c in range(3):
+        np.testing.assert_array_equal(np.asarray(bat[c]),
+                                      np.asarray(seq[c]))
+        assert int(bat[c].max()) < int(ns[c])
+
+
+def test_stacked_adapter_init_bitwise(task, setup):
+    """vmapped init over contract keys == per-client LLMClient init."""
+    cfg, base = setup
+    root = llmc.llm_root(11)
+    cl = llmc.LLMClient(cfg, base, root, client_id=1,
+                        n_labels=task.n_classes)
+    ikeys = jax.vmap(llmc.llm_key, in_axes=(None, 0, None))(
+        root, jnp.arange(3), llmc.LLM_INIT_STEP)
+    stacked = jax.vmap(lambda k: M.init_adapters(cfg, k, base))(ikeys)
+    for a, b in zip(jax.tree.leaves(cl.adapters),
+                    jax.tree.leaves(stacked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b[1]))
+
+
+# --- stage parity: sequential reference vs one fused program -----------------
+def test_stage_parity_losses_f1_teacher(task, seq_ref, bat_ref):
+    _, seq_losses, seq_f1, seq_teachers = seq_ref
+    _, out = bat_ref
+    np.testing.assert_allclose(out.losses, seq_losses, atol=5e-4)
+    # identical draws → identical predictions; f1 could only move if an
+    # argmax near-tie flips on ~1e-6 logit noise (would jump by >= 1/n)
+    np.testing.assert_allclose(out.f1, seq_f1, atol=0.05)
+    for i, ts in enumerate(seq_teachers):
+        got = out.teacher[i, : task.clients[i].n]
+        np.testing.assert_allclose(got, np.asarray(ts), atol=5e-4)
+        np.testing.assert_allclose(got.sum(1), 1.0, atol=1e-5)
+
+
+def test_stage_parity_final_adapters(task, seq_ref, bat_ref):
+    clients, *_ = seq_ref
+    eng, _ = bat_ref
+    for i, cl in enumerate(clients):
+        for a, b in zip(jax.tree.leaves(cl.adapters),
+                        jax.tree.leaves(eng.adapters)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b[i]),
+                                       atol=1e-3)
+
+
+def test_refresh_continues_global_step_stream(task, setup):
+    """A second run() is a *refresh*, not a replay: the contract's step
+    index is global, so two runs of S steps draw-for-draw match the
+    sequential path doing fine_tune → distill → fine_tune → distill
+    with its own continuing step counter."""
+    cfg, base = setup
+    eng = BatchedLLMEngine(task, cfg, base, seed=7, steps=3)
+    eng.run()
+    out2 = eng.run()
+
+    root = llmc.llm_root(7)
+    clients = []
+    for i in range(task.n_clients):
+        cl = llmc.LLMClient(cfg, base, root, client_id=i,
+                            n_labels=task.n_classes)
+        cl.fine_tune(task.clients[i].llm_batch, steps=3)
+        clients.append(cl)
+    llmc.distill_to_global(clients, task.weights)
+    for i, cl in enumerate(clients):
+        assert cl._n_steps == 3
+        cl.fine_tune(task.clients[i].llm_batch, steps=3)  # steps 3..5
+    llmc.distill_to_global(clients, task.weights)
+    seq_losses = [cl.eval_loss(task.clients[i].llm_batch)
+                  for i, cl in enumerate(clients)]
+    np.testing.assert_allclose(out2.losses, seq_losses, atol=5e-4)
+
+
+def test_fine_tune_learns_batched(task, seq_ref, bat_ref):
+    """The fused stage trains, not just runs: post-distill eval loss is
+    far below chance NLL and F1 is far above chance."""
+    _, out = bat_ref
+    chance = np.log(task.n_classes)
+    assert all(l < 0.8 * chance for l in out.losses)
+    assert all(f > 0.6 for f in out.f1)
+    assert np.all(np.isfinite(out.final_train_loss))
+
+
+# --- ragged client pad is inert ----------------------------------------------
+def test_client_padding_rows_inert(task, setup):
+    """pad_to adds inert clients (zero rowmask/weight, PAD shards): real
+    clients' outputs match the unpadded run and padded rows train to
+    exactly nothing (zero CE grads → zero AdamW updates)."""
+    cfg, base = setup
+    plain = BatchedLLMEngine(task, cfg, base, seed=11, steps=STEPS)
+    padded = BatchedLLMEngine(task, cfg, base, seed=11, steps=STEPS,
+                              pad_to=5)
+    init_pad = jax.tree.map(lambda x: np.asarray(x[3:]), padded.adapters)
+    a = plain.run()
+    b = padded.run()
+    np.testing.assert_allclose(b.losses, a.losses, atol=1e-5)
+    np.testing.assert_allclose(b.f1, a.f1, atol=0.05)
+    np.testing.assert_allclose(b.teacher, a.teacher, atol=1e-5)
+    # padding clients' adapters moved only by the distill blend toward
+    # a_g, never by training: a_pad_final == (1-ρ)·a_pad_init + ρ·a_g
+    rho = 0.25
+    for g, p0, pf in zip(jax.tree.leaves(padded.a_g),
+                         jax.tree.leaves(init_pad),
+                         jax.tree.leaves(padded.adapters)):
+        want = (1 - rho) * p0 + rho * np.asarray(g)[None]
+        np.testing.assert_allclose(np.asarray(pf[3:]), want, atol=1e-6)
+
+
+# --- on-device FedAvg / distill algebra --------------------------------------
+def test_weighted_average_stacked_matches_fedavg():
+    rng = np.random.default_rng(0)
+    leaves = [{"a": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+              for _ in range(3)]
+    w = [3.0, 1.0, 2.0]
+    host = llmc.fedavg_adapters(leaves, w)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+    dev = lora_mod.weighted_average_stacked(stacked, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(dev["a"]),
+                               np.asarray(host["a"]), atol=1e-6)
+    # zero-weight (padding) clients contribute nothing
+    w_pad = jnp.asarray([3.0, 1.0, 2.0, 0.0])
+    stacked4 = jax.tree.map(
+        lambda s: jnp.concatenate([s, 1e6 * jnp.ones_like(s[:1])]),
+        stacked)
+    dev4 = lora_mod.weighted_average_stacked(stacked4, w_pad)
+    np.testing.assert_allclose(np.asarray(dev4["a"]),
+                               np.asarray(host["a"]), atol=1e-6)
+
+
+def test_blend_adapters_stacked_broadcast():
+    a = {"x": jnp.arange(6, dtype=jnp.float32).reshape(3, 2)}
+    g = {"x": jnp.ones((2,), jnp.float32)}
+    out = lora_mod.blend_adapters(a, g, rho=0.5)
+    np.testing.assert_allclose(np.asarray(out["x"]),
+                               0.5 * np.asarray(a["x"]) + 0.5)
+
+
+# --- sharding helpers for adapter pytrees ------------------------------------
+def test_client_tree_specs_strict():
+    tree = {"a": np.zeros((4, 2, 3)), "step": np.zeros((4,))}
+    specs = shd.client_tree_specs(tree, 4)
+    assert specs["a"] == jax.sharding.PartitionSpec("clients", None, None)
+    assert specs["step"] == jax.sharding.PartitionSpec("clients")
+    with pytest.raises(ValueError, match="vmap"):
+        shd.client_tree_specs({"a": np.zeros((3, 2))}, 4)
+    with pytest.raises(ValueError, match="vmap"):
+        shd.client_tree_specs({"a": np.zeros(())}, 4)
+
+
+def test_put_replicated_pytree():
+    mesh = shd.client_mesh(1)
+    tree = {"w": np.ones((3, 2)), "g": (np.zeros((5,)),)}
+    out = shd.put_replicated(mesh, tree)
+    assert out["w"].sharding.spec == jax.sharding.PartitionSpec()
+    np.testing.assert_array_equal(np.asarray(out["g"][0]), tree["g"][0])
+
+
+# --- 'clients' mesh parity (CI runs this under 8 forced host devices) --------
+@multi_device
+def test_sharded_llm_stage_parity():
+    """8-way mesh == single device for the fused LLM stage, ragged C=3
+    (5 inert padding clients) included."""
+    task = build_task("genomic", n_clients=3, train_size=48, test_size=16,
+                      val_size=16, seed=9)
+    cfg = task_llm_config("tiny-llm", task.vocab_size, task.llm_seq_len)
+    base = M.init_params(cfg, jax.random.PRNGKey(1), dtype=jnp.float32)
+    one = BatchedLLMEngine(task, cfg, base, seed=4, steps=4).run()
+    shard = BatchedLLMEngine(task, cfg, base, seed=4, steps=4,
+                             n_devices=8).run()
+    np.testing.assert_allclose(shard.losses, one.losses, atol=1e-4)
+    np.testing.assert_allclose(shard.f1, one.f1, atol=0.05)
+    np.testing.assert_allclose(shard.teacher, one.teacher, atol=1e-4)
+
+
+@multi_device
+def test_sharded_llm_qfl_run_parity():
+    """Full llm-qfl round trip with the LLM stage sharded: regulation
+    budgets and selection survive the mesh."""
+    from repro.core.orchestrator import run_experiment
+    task = build_task("genomic", n_clients=8, train_size=64, test_size=24,
+                      val_size=24, seed=5)
+    kw = dict(method="llm-qfl", optimizer="nelder-mead", n_rounds=2,
+              maxiter0=3, llm_steps=4, early_stop=False, seed=2,
+              engine="batched")
+    one = run_experiment(task, **kw)
+    shard = run_experiment(task, n_devices=8, **kw)
+    np.testing.assert_allclose(shard.llm_losses, one.llm_losses,
+                               atol=1e-4)
+    assert shard.series("maxiters") == one.series("maxiters")
+    assert shard.series("selected") == one.series("selected")
+    np.testing.assert_allclose(shard.series("server_loss"),
+                               one.series("server_loss"), atol=1e-4)
+
+
+# --- subprocess: sharded-LLM coverage from a single-device tier-1 run --------
+_CHILD = r"""
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.data.tasks import build_task
+from repro.core.batched_llm import BatchedLLMEngine
+from repro.core.llm_client import task_llm_config
+from repro.models import model as M
+
+task = build_task("genomic", n_clients=3, train_size=36, test_size=12,
+                  val_size=12, seed=9)
+cfg = task_llm_config("tiny-llm", task.vocab_size, task.llm_seq_len)
+base = M.init_params(cfg, jax.random.PRNGKey(1), dtype=jnp.float32)
+one = BatchedLLMEngine(task, cfg, base, seed=4, steps=3).run()
+shard = BatchedLLMEngine(task, cfg, base, seed=4, steps=3,
+                         n_devices=8).run()
+print("RESULT:" + json.dumps({
+    "dloss": float(np.abs(shard.losses - one.losses).max()),
+    "dteacher": float(np.abs(shard.teacher - one.teacher).max()),
+}))
+"""
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) >= 8,
+    reason="a real mesh is visible — the in-process parity tests above "
+           "cover this; don't pay the heavy child interpreter twice")
+def test_sharded_llm_parity_forced_host_devices():
+    """Force 8 host devices in a fresh interpreter and require the
+    sharded LLM stage to match the single-device stage, padding (ragged
+    C=3 on an 8-way mesh) included."""
+    env = dict(os.environ)
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (flags
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT:")][-1]
+    got = json.loads(line[len("RESULT:"):])
+    assert got["dloss"] <= 1e-4, got
+    assert got["dteacher"] <= 1e-4, got

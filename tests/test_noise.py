@@ -89,6 +89,43 @@ def test_sample_counts_zero_mass_rows_fall_back_to_uniform():
     np.testing.assert_allclose(counts[0] / shots, [1 / 3] * 3, atol=0.04)
 
 
+def test_sample_counts_nan_rows_propagate():
+    """A diverged (NaN) probability row must come back NaN — not be
+    laundered into a plausible finite loss by the zero-mass→uniform
+    fallback — so ``selection.py``'s +inf hardening still sees it on
+    noisy backends."""
+    shots = 200
+    p = jnp.array([[jnp.nan, 0.5, 0.5], [0.2, 0.3, 0.5]])
+    counts = np.asarray(backends.sample_counts(KEY, p, shots))
+    assert np.isnan(counts[0]).all()
+    np.testing.assert_allclose(counts[1].sum(), shots)
+    # draw-stability: the finite row's counts are bitwise what they are
+    # when the NaN row is replaced by any finite distribution — NaN
+    # handling must not shift other rows' draws (pinned parity seeds)
+    p_ref = jnp.array([[1 / 3, 1 / 3, 1 / 3], [0.2, 0.3, 0.5]])
+    ref = np.asarray(backends.sample_counts(KEY, p_ref, shots))
+    np.testing.assert_array_equal(counts[1], ref[1])
+    # ...and a genuinely zero-mass row still falls back to uniform
+    np.testing.assert_allclose(
+        np.asarray(backends.sample_counts(
+            KEY, jnp.array([[0.0, 0.0, 0.0]]), 3000))[0] / 3000,
+        [1 / 3] * 3, atol=0.04)
+
+
+def test_nan_probs_surface_as_inf_distance_in_selection():
+    """End to end: a diverged client's sampled loss is NaN, which the
+    alignment selector sorts last as +inf instead of averaging in."""
+    from repro.core import selection
+    b = backends.get("fake")
+    p = jnp.array([[jnp.nan, jnp.nan], [0.6, 0.4]])
+    noisy = np.asarray(b.transform_probs(p, key=KEY))
+    assert np.isnan(noisy[0]).all()
+    losses = [float(-np.log(noisy[i].max() + 1e-9)) for i in range(2)]
+    d = selection.distances(losses, 0.5)
+    assert d[0] == np.inf and np.isfinite(d[1])
+    assert selection.select_aligned(losses, 0.5, 0.5) == [1]
+
+
 def test_sample_counts_dtype_follows_probs():
     p16 = jnp.array([[0.5, 0.5]], jnp.bfloat16)
     assert backends.sample_counts(KEY, p16, 10).dtype == jnp.bfloat16
