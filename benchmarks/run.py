@@ -14,9 +14,9 @@ import sys
 import time
 import traceback
 
-BENCHES = ("kernels", "federated_round", "llm_round", "regulation",
-           "convergence", "selection", "reg_variants", "backends",
-           "comm_cost", "llm_models", "theory", "roofline")
+BENCHES = ("kernels", "federated_round", "llm_round", "population",
+           "regulation", "convergence", "selection", "reg_variants",
+           "backends", "comm_cost", "llm_models", "theory", "roofline")
 
 
 def run_one(name: str) -> bool:

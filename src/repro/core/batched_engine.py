@@ -127,17 +127,24 @@ from repro.quantum import tape as tape_mod
 _ROUND_CACHE: Dict[tuple, object] = {}
 
 
-def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool,
-                    optimizer: str = "spsa", max_iter: int = 100):
-    """Jitted local-phase program → (x (C,P), n_evals (C,)).
+def build_local_phase(spec, backend, *, lam: float, mu: float,
+                      use_llm: bool, optimizer: str = "spsa",
+                      max_iter: int = 100):
+    """Traceable local-training phase — the round program's body.
 
-    spsa        : (qX, qy, mask, teacher, θ_g, iters, deltas, ckeys)
-    nelder-mead : (qX, qy, mask, teacher, θ_g, iters, ckeys) —
-                  ``max_iter`` is a static bound (branch-record width),
-                  budgets stay traced.
+    Returns ``local_phase(qX, qy, mask, teacher, theta_g, iters, ckeys,
+    deltas=None, active=None) → (x (C, P) f32, n_evals (C,) int32)``,
+    pure and jit-free: ``_build_round_fn`` wraps it in ``jax.jit`` for
+    the per-round engine, and ``core/fused_rounds.py`` calls it inside
+    its ``lax.scan`` body so the fused multi-round driver runs exactly
+    the same math as the per-round program.
 
-    ``ckeys`` is the (C,) per-client round-key stack (see the module's
-    shot-noise key contract); inert when ``backend.shots == 0``.
+    ``deltas`` is required for SPSA (ignored by NM); ``active`` is the
+    optional (C,) participation mask threaded to the batched optimizer
+    (inactive clients keep ``theta_g`` and spend 0 evals; ``None`` is
+    bitwise the all-active path).  ``ckeys`` is the (C,) per-client
+    round-key stack (see the module's shot-noise key contract); inert
+    when ``backend.shots == 0``.
     """
     cq = tape_mod.compile_qnn(spec)
     eps = 1e-9
@@ -189,24 +196,55 @@ def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool,
         return x0, f
 
     if optimizer == "nelder-mead":
-        @jax.jit
-        def round_fn(qX, qy, mask, teacher, theta_g, iters, ckeys):
+        def local_phase(qX, qy, mask, teacher, theta_g, iters, ckeys,
+                        deltas=None, active=None):
             x0, f = prep(qX, qy, mask, teacher, theta_g, ckeys)
             simplex, fvals, n_evals, _ = batched_nm(f, x0, iters,
                                                     int(max_iter),
-                                                    keyed=sampling)
+                                                    keyed=sampling,
+                                                    active=active)
             x, _ = best_point(simplex, fvals)
+            if active is not None:
+                # an untouched init simplex's best vertex is an offset
+                # row, not x0 — inactive clients must return their start
+                x = jnp.where(active[:, None], x, x0)
             return x, n_evals
     elif optimizer == "spsa":
-        @jax.jit
-        def round_fn(qX, qy, mask, teacher, theta_g, iters, deltas, ckeys):
+        def local_phase(qX, qy, mask, teacher, theta_g, iters, ckeys,
+                        deltas=None, active=None):
             x0, f = prep(qX, qy, mask, teacher, theta_g, ckeys)
             x, _, n_evals = batched_spsa(f, x0, iters, deltas,
-                                         keyed=sampling)
+                                         keyed=sampling, active=active)
+            if active is not None:
+                x = jnp.where(active[:, None], x, x0)
             return x, n_evals
     else:
         raise ValueError(f"unknown batched optimizer {optimizer!r}")
 
+    return local_phase
+
+
+def _build_round_fn(spec, backend, lam: float, mu: float, use_llm: bool,
+                    optimizer: str = "spsa", max_iter: int = 100):
+    """Jitted per-round wrapper over ``build_local_phase`` →
+    (x (C,P), n_evals (C,)).
+
+    spsa        : (qX, qy, mask, teacher, θ_g, iters, deltas, ckeys)
+    nelder-mead : (qX, qy, mask, teacher, θ_g, iters, ckeys) —
+                  ``max_iter`` is a static bound (branch-record width),
+                  budgets stay traced.
+    """
+    lp = build_local_phase(spec, backend, lam=lam, mu=mu, use_llm=use_llm,
+                           optimizer=optimizer, max_iter=max_iter)
+    if optimizer == "nelder-mead":
+        @jax.jit
+        def round_fn(qX, qy, mask, teacher, theta_g, iters, ckeys):
+            return lp(qX, qy, mask, teacher, theta_g, iters, ckeys)
+    else:
+        @jax.jit
+        def round_fn(qX, qy, mask, teacher, theta_g, iters, deltas, ckeys):
+            return lp(qX, qy, mask, teacher, theta_g, iters, ckeys,
+                      deltas=deltas)
     return round_fn
 
 

@@ -55,6 +55,14 @@ class RunConfig:
     mu: float = 0.01                   # µ prox weight (Eq. 6)
     optimizer: str = "nelder-mead"     # | "spsa"
     engine: str = "sequential"         # | "batched" (one jitted round prog)
+    rounds: str = "host"               # | "fused" (R rounds as ONE jitted
+                                       # scan — core/fused_rounds.py;
+                                       # requires engine="batched")
+    c_round: Optional[int] = None      # fused-only: per-round cohort size
+                                       # drawn from the client population
+                                       # (None = full participation)
+    dropout: float = 0.0               # fused-only: per-round client
+                                       # dropout probability
     n_devices: Optional[int] = None    # 'clients' mesh width for the
                                        # batched engine (None/1 = single
                                        # device, the parity reference)
@@ -111,6 +119,19 @@ class Orchestrator:
         self.rc = rc
         if rc.engine not in ("sequential", "batched"):
             raise ValueError(f"unknown engine {rc.engine!r}")
+        if rc.rounds not in ("host", "fused"):
+            raise ValueError(f"unknown rounds mode {rc.rounds!r}; "
+                             "'host' or 'fused'")
+        if rc.rounds == "fused" and rc.engine != "batched":
+            raise ValueError(
+                "rounds='fused' runs the whole loop as one device "
+                "program and needs the batched local phase; use "
+                "engine='batched'")
+        if rc.rounds != "fused" and (rc.c_round is not None
+                                     or rc.dropout != 0.0):
+            raise ValueError(
+                "c_round / dropout are population semantics of the "
+                "fused round loop; set rounds='fused'")
         if rc.n_devices is not None and rc.n_devices > 1 \
                 and rc.engine != "batched":
             raise ValueError(
@@ -247,6 +268,11 @@ class Orchestrator:
         else:
             self._teacher_probs = [None] * task.n_clients
 
+        if rc.rounds == "fused":
+            # the whole round loop — local phase, FedAvg, regulation,
+            # selection, termination — as ONE jitted scan over rounds
+            return self._run_fused(res)
+
         if rc.engine == "batched":
             # Local phase as one device program: tape-compiled circuits,
             # vmapped clients, masked per-client budgets driving the
@@ -363,6 +389,58 @@ class Orchestrator:
                 res.terminated_early = t < rc.n_rounds
                 break
 
+        res.theta_g = self._theta_g
+        return res
+
+    def _run_fused(self, res: RunResult) -> RunResult:
+        """Dispatch to ``core/fused_rounds.FusedRoundDriver`` and unpack
+        its scanned outputs into the same ``RoundRecord`` stream the
+        host loop produces.  Per-client fields are population-sized
+        (C = task.n_clients): rounds a client did not participate in
+        report NaN losses / 1.0 ratios for it, and its budget / eval
+        rows simply carry forward — the inertness the fused driver
+        guarantees."""
+        rc, task = self.rc, self.task
+        from repro.core.fused_rounds import FusedRoundDriver
+        driver = FusedRoundDriver(
+            task, self.spec, self.backend, optimizer=rc.optimizer,
+            seed=rc.seed, lam=rc.lam, mu=rc.mu, use_llm=rc.uses_llm,
+            teacher_probs=self._teacher_probs if rc.uses_llm else None,
+            llm_losses=self._llm_losses if rc.uses_llm else None,
+            maxiter0=rc.maxiter0, maxiter_cap=rc.maxiter_cap,
+            regulation=rc.regulation, select_frac=rc.select_frac,
+            epsilon=rc.epsilon, n_rounds=rc.n_rounds,
+            early_stop=rc.early_stop, c_round=rc.c_round,
+            dropout=rc.dropout, n_devices=rc.n_devices)
+        out = driver.run(self._theta_g)
+        C = task.n_clients
+        for r in range(rc.n_rounds):
+            if not out.active[r]:
+                break
+            t = r + 1
+            cohort = out.cohort[r]
+            pos = np.nonzero(cohort < C)[0]       # mesh padding rows out
+            losses = np.full(C, np.nan)
+            losses[cohort[pos]] = out.losses[r][pos]
+            ratios = np.ones(C)
+            ratios[cohort[pos]] = out.ratios[r][pos]
+            sel = sorted(int(cohort[p])
+                         for p in np.nonzero(out.selected[r])[0])
+            var = selection.selection_variance(
+                losses.tolist(), float(out.server_loss_pre[r]), sel)
+            res.rounds.append(RoundRecord(
+                t=t, maxiters=out.budgets[r][:C].tolist(),
+                ratios=ratios.tolist(), client_losses=losses.tolist(),
+                selected=sel, server_loss=float(out.server_loss[r]),
+                server_val_acc=float(out.val_acc[r]),
+                server_test_acc=float(out.test_acc[r]),
+                comm_time_s=float(out.comm_time_s[r]),
+                cum_evals=out.cum_evals[r][:C].tolist(),
+                var_all=var["var_all"], var_selected=var["var_selected"]))
+            if out.stop[r] and rc.early_stop:
+                res.terminated_early = t < rc.n_rounds
+                break
+        self._theta_g = np.asarray(out.theta_g, np.float64)
         res.theta_g = self._theta_g
         return res
 

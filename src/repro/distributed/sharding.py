@@ -384,9 +384,49 @@ def put_client_stacks(mesh: Mesh, arrays, n_clients: int):
     """Place a pytree of engine inputs on ``mesh``: client-stacked leaves
     sharded along 'clients', the rest replicated.  The jitted round
     program then partitions along the client axis by computation-follows-
-    data — no in_shardings plumbing at every call site."""
+    data — no in_shardings plumbing at every call site.
+
+    Population stacks (the fused driver's ``(C_pop, …)`` parameter /
+    budget / loss arrays, C_pop ≫ the per-round cohort) place through
+    this same helper: the population axis IS the client axis, padded
+    with ``pad_client_count`` like any other ragged client count.  The
+    round cohort gathered *from* them inside the fused program needs
+    ``constrain_client_axis`` — see below."""
     check_client_divisibility(n_clients, mesh.shape[CLIENTS])
     specs = client_specs(arrays, n_clients)
     return jax.tree.map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
         arrays, specs)
+
+
+def constrain_replicated(x, mesh: Optional[Mesh]):
+    """Pin a traced array to full replication inside a jitted program;
+    no-op when ``mesh is None``.  The fused population driver keeps its
+    ``(C_pop, …)`` carry arrays replicated (see the placement tradeoff
+    in ``core/fused_rounds.py``), and a scatter of sharded per-cohort
+    values into them would otherwise let GSPMD pick an output sharding
+    that drifts between scan iterations."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+
+def constrain_client_axis(x, mesh: Optional[Mesh]):
+    """Pin a **traced** client-stacked array to the 'clients' axis inside
+    a jitted program (``with_sharding_constraint``); no-op when
+    ``mesh is None`` (the single-device path).
+
+    Computation-follows-data covers arrays that enter the program with a
+    placement, but the fused round driver *gathers* its per-round cohort
+    stacks out of the ``(C_pop, …)`` population by traced indices — a
+    dynamic gather whose output sharding GSPMD is free to resolve as
+    replicated, which would serialize the whole local phase on one
+    device.  Constraining the gathered ``(C_round, …)`` stacks (leading
+    dim on 'clients', rest replicated, i.e. ``client_stack_spec``)
+    restores the per-client partitioning the round program is built
+    around.  ``C_round`` must divide the mesh — the fused driver
+    enforces that at construction."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, client_stack_spec(getattr(x, "ndim", 0))))

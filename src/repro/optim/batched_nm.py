@@ -78,7 +78,7 @@ def init_simplexes(x0: jnp.ndarray, *, step: float = 0.25) -> jnp.ndarray:
 def batched_nm(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
                max_iter: int, *,
                alpha=1.0, gamma=2.0, rho=0.5, sigma=0.5, step: float = 0.25,
-               keyed: bool = False
+               keyed: bool = False, active: jnp.ndarray = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Masked batched Nelder–Mead.  Traceable (use under ``jax.jit``).
 
@@ -88,6 +88,12 @@ def batched_nm(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     x0       : (C, P) start (typically θ_g broadcast to all clients)
     iters    : (C,)   per-client iteration budgets (mask, not trip count)
     max_iter : static upper bound on any budget (branch-record width)
+    active   : optional (C,) bool participation mask (see
+               ``batched_spsa``): an inactive client's budget is forced
+               to 0 — its simplex stays the untouched init simplex, its
+               branch row stays ``BRANCH_INACTIVE`` — and both its init
+               and per-iteration eval counts are 0.  ``None`` is bitwise
+               the all-active behavior.
 
     Returns ``(simplex (C, n+1, P), fvals (C, n+1), n_evals (C,),
     branches (C, max_iter) int32)``.  ``n_evals`` counts what the
@@ -97,6 +103,9 @@ def batched_nm(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     x0 = jnp.asarray(x0, jnp.float32)
     iters = jnp.asarray(iters, jnp.int32)
     C, n = x0.shape
+    if active is not None:
+        active = jnp.asarray(active, bool)
+        iters = jnp.where(active, iters, 0)
 
     # f over a (C, K, P) candidate stack (+ (K,) slots) → (C, K)
     if keyed:
@@ -108,6 +117,8 @@ def batched_nm(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     simplex0 = init_simplexes(x0, step=step)
     fvals0 = fstack(simplex0, jnp.arange(n + 1))             # (C, n+1)
     evals0 = jnp.full((C,), n + 1, jnp.int32)
+    if active is not None:
+        evals0 = jnp.where(active, evals0, 0)
     branches0 = jnp.full((C, int(max_iter)), BRANCH_INACTIVE, jnp.int32)
 
     def body(i, carry):

@@ -55,7 +55,8 @@ def make_deltas(seeds: Sequence[int], max_iter: int, dim: int) -> np.ndarray:
 def batched_spsa(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
                  deltas: jnp.ndarray, *,
                  a=0.2, c=0.15, A=10.0, alpha=0.602, gamma=0.101,
-                 clip: float = 1.0, keyed: bool = False
+                 clip: float = 1.0, keyed: bool = False,
+                 active: jnp.ndarray = None
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Masked batched SPSA.  Traceable (use under ``jax.jit``).
 
@@ -65,6 +66,13 @@ def batched_spsa(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     x0     : (C, P) start (typically θ_g broadcast to all clients)
     iters  : (C,)   per-client iteration budgets (mask, not trip count)
     deltas : (C, M, P) precomputed perturbation signs, M ≥ max(iters)
+    active : optional (C,) bool — the fused driver's participation mask
+             (dropped / straggler / outside-cohort clients): an inactive
+             client's budget is forced to 0 (it never updates, so ``x``
+             returns its start row) and its ``n_evals`` is 0, because a
+             client that never participated spends nothing.  ``None``
+             (every call outside the fused driver) is bitwise the
+             all-active behavior.
 
     Returns (x (C,P), f_final (C,), n_evals (C,)) where ``n_evals`` counts
     what the sequential path would have spent: 1 init + 3/iter + 1 final.
@@ -72,6 +80,9 @@ def batched_spsa(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     x0 = jnp.asarray(x0, jnp.float32)
     iters = jnp.asarray(iters, jnp.int32)
     deltas = jnp.asarray(deltas, jnp.float32)
+    if active is not None:
+        active = jnp.asarray(active, bool)
+        iters = jnp.where(active, iters, 0)
 
     if keyed:
         call = f
@@ -104,4 +115,6 @@ def batched_spsa(f: Callable, x0: jnp.ndarray, iters: jnp.ndarray,
     n_steps = jnp.max(iters)
     x, _ = jax.lax.fori_loop(0, n_steps, body, (x0, f0))
     n_evals = 2 + 3 * iters
+    if active is not None:
+        n_evals = jnp.where(active, n_evals, 0)
     return x, call(x, jnp.int32(FINAL_EVAL_SLOT)), n_evals

@@ -42,6 +42,14 @@ of parameters):
                 ``REPORT_EVAL_SLOT`` on the client's stream; server-side
                 evaluations use the reserved client id
                 ``SERVER_CLIENT`` with slots ``SERVER_SLOT_*``.
+  Population:   the fused multi-round driver's per-round cohort
+                subsample draws from the reserved ``POP_CLIENT`` stream
+                at ``POP_SLOT_COHORT``; a client's dropout coin draws
+                from the client's **own** stream at
+                ``DROPOUT_EVAL_SLOT`` — a pure function of
+                ``(seed, round, client)``, so whether a client drops is
+                independent of cohort size or composition and
+                participation sweeps at one seed stay comparable.
 
 ``apply_channel`` is traceable with no key; ``transform_probs`` *raises*
 when ``shots > 0`` and no key is supplied — a finite-shot backend must
@@ -60,9 +68,14 @@ import jax.numpy as jnp
 # slots, so the reserved ids live at the edges of the range.
 FINAL_EVAL_SLOT = 0x7FFFFFFF      # SPSA's post-loop polish evaluation
 REPORT_EVAL_SLOT = 0x7FFFFFFE     # orchestrator per-client loss report
+DROPOUT_EVAL_SLOT = 0x7FFFFFFD    # per-round dropout coin on the
+                                  # client's own stream (fused driver)
 SERVER_CLIENT = 0x7FFFFFFF        # server-side evals (not a device id;
                                   # fold_in coerces to uint32, so ids
                                   # must be non-negative)
+POP_CLIENT = 0x7FFFFFFD           # population-control stream: cohort
+                                  # subsampling draws (fused driver)
+POP_SLOT_COHORT = 0               # per-round cohort subsample draw
 SERVER_SLOT_LOSS_PRE = 0          # server loss of θ_g before aggregation
 SERVER_SLOT_LOSS_POST = 1         # server loss after aggregation
 SERVER_SLOT_VAL_ACC = 2

@@ -1,0 +1,508 @@
+"""Cross-engine parity of the fused round loop (``core/fused_rounds``).
+
+The fused program runs R federated rounds as one jitted ``lax.scan``;
+these tests pin it to the host references round-for-round at fixed
+seeds.  The parity split (module docstring of ``fused_rounds``):
+
+  - **exact**: every quantized quantity — selected sets, regulated
+    budgets, cumulative eval counts, cohort / dropout draws, and the
+    termination round.  These go through integer or key-derivation
+    paths with no floating-point headroom.
+  - **f32 tolerance (~1e-5)**: θ_g, client losses, server metrics —
+    the host aggregates and reports in float64 while the fused scan is
+    float32 end to end.  On finite-shot backends with equal client
+    shards the reported losses are additionally *bitwise* (same padded
+    draw shape, same ``REPORT_EVAL_SLOT`` key).
+
+Property tests (hypothesis, or the deterministic conftest fallback)
+pin the traceable twins — ``select_topk_mask`` / ``regulate_batched`` /
+``termination_step`` — to ``selection.select_aligned`` /
+``regulation.regulate`` / ``TerminationCriterion`` on adversarial
+inputs (ties, NaN/inf, knife-edge fractions), drawing floats from
+binary-fraction grids so f32 and f64 order identically.
+
+Mesh coverage mirrors ``test_client_sharding.py``: in-process parity on
+a real >= 8 device mesh (CI's forced-host-device step) plus a subprocess
+child that forces 8 host devices so single-device tier-1 runs still
+exercise the sharded population path.
+"""
+import functools
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import regulation as regulation_mod
+from repro.core import selection
+from repro.core.fused_rounds import (FusedRoundDriver, regulate_batched,
+                                     select_topk_mask, termination_step)
+from repro.core.orchestrator import run_experiment
+from repro.core.termination import TerminationCriterion
+from repro.quantum import backends as backend_mod
+from repro.quantum import qnn
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@functools.lru_cache(maxsize=None)
+def _task(n_clients, train, test, val, seed):
+    from repro.data.tasks import build_task
+    return build_task("genomic", n_clients=n_clients, train_size=train,
+                      test_size=test, val_size=val, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# orchestrator-level parity: rounds="fused" vs rounds="host", same config
+# ---------------------------------------------------------------------------
+def _pair(task, **kw):
+    host = run_experiment(task, engine="batched", rounds="host", **kw)
+    fused = run_experiment(task, engine="batched", rounds="fused", **kw)
+    return host, fused
+
+
+def _assert_round_parity(host, fused, atol=1e-5):
+    assert len(fused.rounds) == len(host.rounds)
+    assert fused.terminated_early == host.terminated_early
+    # quantized quantities: exact, every round
+    assert fused.series("selected") == host.series("selected")
+    assert fused.series("maxiters") == host.series("maxiters")
+    assert fused.series("cum_evals") == host.series("cum_evals")
+    for fr, hr in zip(fused.rounds, host.rounds):
+        np.testing.assert_allclose(fr.client_losses, hr.client_losses,
+                                   atol=atol)
+        np.testing.assert_allclose(fr.ratios, hr.ratios, rtol=1e-5)
+        assert abs(fr.server_loss - hr.server_loss) <= atol
+        assert abs(fr.server_val_acc - hr.server_val_acc) <= atol
+        assert abs(fr.server_test_acc - hr.server_test_acc) <= atol
+        np.testing.assert_allclose(fr.comm_time_s, hr.comm_time_s,
+                                   rtol=1e-5, atol=1e-12)
+    np.testing.assert_allclose(fused.theta_g, host.theta_g, atol=2e-6)
+
+
+def test_parity_qfl_spsa_noiseless():
+    """R=6 fused == host, round for round (SPSA, exact backend)."""
+    task = _task(3, 90, 45, 30, 5)
+    host, fused = _pair(task, method="qfl", optimizer="spsa", n_rounds=6,
+                        maxiter0=3, early_stop=False, seed=3)
+    assert len(fused.rounds) == 6
+    _assert_round_parity(host, fused)
+
+
+def test_parity_qfl_spsa_shots():
+    """Finite-shot SPSA: draws follow the eval_key contract, so eval
+    counts and budgets stay exact and the two reporting paths — the
+    fused scan's in-carry report vs the orchestrator's per-client
+    ``_nll`` loop — agree to f32 (the host trains from a float64 θ_g,
+    so trained thetas differ by ulps before the report draw; the
+    bitwise reporting pin lives in the population parity test, where
+    both paths share the f32 local phase)."""
+    task = _task(3, 90, 45, 30, 5)
+    host, fused = _pair(task, method="qfl", optimizer="spsa", n_rounds=6,
+                        maxiter0=3, early_stop=False, backend="fake",
+                        seed=3)
+    _assert_round_parity(host, fused)
+
+
+def test_parity_qfl_nm_noiseless():
+    """Nelder–Mead's branch ladder survives the fusion: per-iteration
+    branch choices (hence eval counts) are quantized and stay exact."""
+    task = _task(3, 90, 45, 30, 5)
+    host, fused = _pair(task, method="qfl", optimizer="nelder-mead",
+                        n_rounds=6, maxiter0=3, early_stop=False, seed=3)
+    _assert_round_parity(host, fused)
+
+
+def test_parity_llmqfl_nm_shots_regulation_selection():
+    """The full LLM-QFL path — regulation boosts budgets from round 2,
+    alignment selection keeps top-50% — fused vs host, finite shots."""
+    task = _task(3, 90, 45, 30, 5)
+    kw = dict(method="llm-qfl", optimizer="nelder-mead", backend="fake",
+              n_rounds=6, maxiter0=3, maxiter_cap=12, select_frac=0.5,
+              llm_steps=4, early_stop=False, seed=3)
+    host, fused = _pair(task, **kw)
+    _assert_round_parity(host, fused)
+    # the interesting machinery actually fired: budgets were regulated
+    # above maxiter0 and selection kept k = round(0.5 * 3) = 2 clients
+    assert host.rounds[-1].maxiters != [3, 3, 3]
+    assert all(len(r.selected) == 2 for r in host.rounds)
+
+
+def test_parity_early_termination():
+    """A huge ε terminates at t=2 (first round with two recorded
+    losses): both paths stop at the same round with the same flag."""
+    task = _task(3, 90, 45, 30, 5)
+    host, fused = _pair(task, method="qfl", optimizer="spsa", n_rounds=6,
+                        maxiter0=3, epsilon=10.0, early_stop=True, seed=3)
+    assert len(host.rounds) == 2
+    assert host.terminated_early and fused.terminated_early
+    _assert_round_parity(host, fused)
+
+
+# ---------------------------------------------------------------------------
+# population mode: fused vs the driver's host-reference oracle
+# ---------------------------------------------------------------------------
+def _pop_driver(backend="exact", dropout=0.0, n_devices=None, c_round=4,
+                n_rounds=4):
+    task = _task(12, 96, 32, 32, 7)
+    spec = qnn.QNNSpec("vqc", n_qubits=4, n_classes=task.n_classes)
+    driver = FusedRoundDriver(
+        task, spec, backend_mod.get(backend), optimizer="spsa", seed=4,
+        maxiter0=3, n_rounds=n_rounds, early_stop=False, c_round=c_round,
+        dropout=dropout, n_devices=n_devices)
+    theta0 = np.asarray(spec.init_params(jax.random.PRNGKey(11)),
+                        np.float64)
+    return driver, theta0
+
+
+def _assert_population_parity(a, b, atol=1e-5):
+    for field in ("active", "stop", "cohort", "dropped", "selected",
+                  "n_evals", "budgets", "cum_evals", "budgets_final",
+                  "cum_evals_final"):
+        np.testing.assert_array_equal(getattr(a, field),
+                                      getattr(b, field), err_msg=field)
+    np.testing.assert_array_equal(np.isnan(a.losses), np.isnan(b.losses))
+    np.testing.assert_allclose(a.losses, b.losses, atol=atol)
+    np.testing.assert_allclose(a.server_loss, b.server_loss, atol=atol)
+    np.testing.assert_allclose(
+        a.theta_g, np.asarray(b.theta_g, np.float32), atol=2e-6)
+
+
+@pytest.mark.parametrize("backend,dropout", [("exact", 0.0),
+                                             ("fake", 0.25)])
+def test_population_parity_vs_host_reference(backend, dropout):
+    """Keyed cohorts + dropout: the fused scan's gather/scatter round
+    equals the eager per-round host loop — cohort draws, drop coins,
+    budgets, eval spend exactly; losses/θ to f32."""
+    driver, theta0 = _pop_driver(backend=backend, dropout=dropout)
+    fused = driver.run(theta0)
+    host = driver.run_host_reference(theta0)
+    _assert_population_parity(fused, host)
+    if backend == "fake":
+        # both paths train from the same f32 θ and the task's shards
+        # are equal (96/12 = 8 each, so the padded report draw shape is
+        # each client's own): the in-carry report equals the per-client
+        # host transfer **bitwise**, finite shots included
+        np.testing.assert_array_equal(fused.losses, host.losses)
+
+
+def test_subsampling_inertness_and_determinism():
+    """Clients outside the round's cohort — and dropped cohort members —
+    are bitwise untouched: budgets / cum_evals / last_losses carry
+    forward, eval spend is 0, losses NaN, never selected.  A same-seed
+    rerun is bitwise identical (sweeps at one seed are comparable)."""
+    driver, theta0 = _pop_driver(backend="fake", dropout=0.25)
+    out = driver.run(theta0)
+    C, R = driver.c_pop, driver.n_rounds
+
+    sampled = set()
+    for r in range(R):
+        cohort = out.cohort[r]
+        effective = cohort[~out.dropped[r]]
+        sampled.update(int(c) for c in effective)
+        # non-cohort rows: identical to the previous round's carry
+        outside = np.setdiff1d(np.arange(C), cohort)
+        prev_b = out.budgets[r - 1] if r else np.full(C, 3, np.int32)
+        prev_c = out.cum_evals[r - 1] if r else np.zeros(C, np.int32)
+        np.testing.assert_array_equal(out.budgets[r][outside],
+                                      prev_b[outside])
+        np.testing.assert_array_equal(out.cum_evals[r][outside],
+                                      prev_c[outside])
+        # dropped members: zero spend, NaN report, never selected,
+        # carries held
+        for p in np.nonzero(out.dropped[r])[0]:
+            cid = int(cohort[p])
+            assert out.n_evals[r][p] == 0
+            assert np.isnan(out.losses[r][p])
+            assert not out.selected[r][p]
+            assert out.budgets[r][cid] == prev_b[cid]
+            assert out.cum_evals[r][cid] == prev_c[cid]
+
+    # the population outruns the cohorts: some client is never trained
+    # and its final carries sit at their init values
+    never = sorted(set(range(C)) - sampled)
+    assert never, "population too small to leave an untouched client"
+    for cid in never:
+        assert out.budgets_final[cid] == 3
+        assert out.cum_evals_final[cid] == 0
+        assert np.isinf(out.last_losses_final[cid])
+
+    again = driver.run(theta0)
+    for field in ("cohort", "dropped", "selected", "losses", "n_evals",
+                  "budgets", "cum_evals", "theta", "theta_g",
+                  "server_loss", "budgets_final", "last_losses_final",
+                  "cum_evals_final"):
+        np.testing.assert_array_equal(getattr(out, field),
+                                      getattr(again, field),
+                                      err_msg=field)
+
+
+# ---------------------------------------------------------------------------
+# property tests: the traceable twins vs their host reference modules
+# ---------------------------------------------------------------------------
+# binary-fraction grid: |a - b| is exact in BOTH f32 and f64, so the two
+# precisions order distances identically and ties are genuine ties
+_GRID = [-2.0, -0.75, -0.5, -0.25, 0.0, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0,
+         float("inf"), float("-inf"), float("nan")]
+_FINITE = [v for v in _GRID if np.isfinite(v)]
+
+
+@given(st.lists(st.sampled_from(_GRID), min_size=1, max_size=12),
+       st.sampled_from(_FINITE),
+       st.sampled_from([0.05, 0.25, 0.5, 0.75, 1.0]))
+@settings(max_examples=60, deadline=None)
+def test_prop_select_topk_mask_matches_select_aligned(losses, s, frac):
+    k = max(1, int(round(frac * len(losses))))
+    d = selection.distances(losses, s)
+    mask = np.asarray(select_topk_mask(d, k))
+    assert sorted(np.nonzero(mask)[0].tolist()) == \
+        selection.select_aligned(losses, s, frac)
+    assert int(mask.sum()) == min(k, len(losses))
+
+
+def test_select_topk_mask_ties_and_nonfinite():
+    # ties resolve to the lower index (stable argsort), non-finite
+    # sorts last, k=1 and k=n edges behave
+    d = np.asarray([1.0, 0.5, 0.5, np.nan, np.inf, 0.5])
+    np.testing.assert_array_equal(
+        np.asarray(select_topk_mask(d, 2)),
+        [False, True, True, False, False, False])
+    np.testing.assert_array_equal(
+        np.asarray(select_topk_mask(d, 1)),
+        [False, True, False, False, False, False])
+    np.testing.assert_array_equal(np.asarray(select_topk_mask(d, 6)),
+                                  [True] * 6)
+    # all-non-finite: still returns exactly k (arbitrary but stable)
+    assert int(np.asarray(select_topk_mask(
+        np.asarray([np.nan, np.inf]), 1)).sum()) == 1
+
+
+@given(st.integers(1, 120),
+       st.floats(0.01, 8.0),
+       st.sampled_from([0.25, 0.5, 1.0, 2.0, 4.0, 0.0, -1.0,
+                        float("inf"), float("nan")]),
+       st.sampled_from(regulation_mod.VARIANTS),
+       st.integers(3, 40))
+@settings(max_examples=80, deadline=None)
+def test_prop_regulate_batched_matches_host(m, q, llm, variant, cap):
+    q = float(np.float32(q))          # feed both paths the same f32 value
+    host = regulation_mod.regulate(m, q, llm, variant=variant, cap=cap)
+    got = int(regulate_batched(m, q, llm, variant=variant, cap=cap))
+    # knife-edge guard: if a ±2e-6 relative nudge of q moves the host
+    # result, the f32 twin may land on either side — bracket it.  The
+    # formulas are monotone in q so the bracket is tight.
+    lo = regulation_mod.regulate(m, q * (1 - 2e-6), llm, variant=variant,
+                                 cap=cap)
+    hi = regulation_mod.regulate(m, q * (1 + 2e-6), llm, variant=variant,
+                                 cap=cap)
+    if lo == hi:
+        assert got == host, (m, q, llm, variant, cap)
+    else:
+        assert min(lo, hi) <= got <= max(lo, hi)
+    # clamp law: whenever the LLM reference is usable the result is in
+    # [min_iter, cap]; a bad reference leaves maxiter untouched
+    if llm > 0 and np.isfinite(llm):
+        assert 1 <= got <= cap
+    else:
+        assert got == m
+
+
+@given(st.integers(1, 120), st.sampled_from([0.5, 1.0, 2.0]),
+       st.floats(0.02, 4.0), st.floats(0.02, 4.0),
+       st.sampled_from(regulation_mod.VARIANTS))
+@settings(max_examples=40, deadline=None)
+def test_prop_regulate_batched_monotone(m, llm, q1, q2, variant):
+    """More behind (larger QNN loss) never means fewer iterations."""
+    ql, qh = sorted([q1, q2])
+    assert int(regulate_batched(m, qh, llm, variant=variant)) >= \
+        int(regulate_batched(m, ql, llm, variant=variant))
+
+
+def test_regulate_batched_guard_ladder():
+    # bad LLM reference: unchanged, NOT clamped (host quirk preserved)
+    assert int(regulate_batched(200, 5.0, 0.0, cap=10)) == 200
+    assert int(regulate_batched(200, 5.0, float("nan"), cap=10)) == 200
+    # diverged client / not behind: hold the budget, clamped
+    assert int(regulate_batched(200, float("nan"), 1.0, cap=10)) == 10
+    assert int(regulate_batched(5, 0.5, 1.0, cap=10)) == 5
+    # behind: boost and clamp; elementwise over stacks
+    np.testing.assert_array_equal(
+        np.asarray(regulate_batched([4, 4, 4], [8.0, 2.0, 1.0],
+                                    [1.0, 1.0, 2.0], cap=10)),
+        [10, 8, 4])
+    with pytest.raises(ValueError, match="variant"):
+        regulate_batched(4, 2.0, 1.0, variant="nope")
+
+
+@given(st.lists(st.sampled_from([0.0, 0.25, 0.5, 0.75, 1.0]),
+                min_size=1, max_size=8),
+       st.sampled_from([1e-3, 0.3, 0.9]),
+       st.integers(1, 2), st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_prop_termination_step_matches_criterion(seq, eps, patience,
+                                                 t_max):
+    crit = TerminationCriterion(epsilon=eps, t_max=t_max,
+                                patience=patience)
+    prev, small = np.float32(np.nan), np.int32(0)
+    for t, loss in enumerate(seq, 1):
+        want = crit.update(loss, t)
+        stop, small = termination_step(prev, small, loss, t, epsilon=eps,
+                                       t_max=t_max, patience=patience)
+        prev = np.float32(loss)
+        assert bool(stop) == want, (seq, eps, patience, t_max, t)
+        if want:
+            break
+
+
+def test_termination_step_tmax_before_patience():
+    """At t == t_max the host returns early WITHOUT updating the
+    patience counter — the fused twin must leave `small` stale too."""
+    stop, small = termination_step(np.float32(1.0), np.int32(0),
+                                   1.0, 2, epsilon=0.9, t_max=2)
+    assert bool(stop) and int(small) == 0  # rel=0 < ε, yet not counted
+    # one round earlier the same losses DO count toward patience
+    stop, small = termination_step(np.float32(1.0), np.int32(0),
+                                   1.0, 2, epsilon=0.9, t_max=5)
+    assert bool(stop) and int(small) == 1
+    # zero-loss plateau converges; a fresh drop to 0 is progress
+    stop, _ = termination_step(np.float32(0.0), np.int32(0), 0.0, 3,
+                               epsilon=1e-3, t_max=9)
+    assert bool(stop)
+    stop, _ = termination_step(np.float32(0.5), np.int32(0), 0.0, 3,
+                               epsilon=1e-3, t_max=9)
+    assert not bool(stop)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+def test_fused_requires_batched_engine():
+    task = _task(3, 90, 45, 30, 5)
+    with pytest.raises(ValueError, match="batched"):
+        run_experiment(task, rounds="fused", engine="sequential")
+    with pytest.raises(ValueError, match="rounds"):
+        run_experiment(task, rounds="warp")
+
+
+def test_population_knobs_require_fused_rounds():
+    task = _task(3, 90, 45, 30, 5)
+    with pytest.raises(ValueError, match="fused"):
+        run_experiment(task, engine="batched", c_round=2)
+    with pytest.raises(ValueError, match="fused"):
+        run_experiment(task, engine="batched", dropout=0.5)
+
+
+def test_driver_validation():
+    task = _task(3, 90, 45, 30, 5)
+    spec = qnn.QNNSpec("vqc", n_qubits=4, n_classes=task.n_classes)
+    be = backend_mod.get("exact")
+    with pytest.raises(ValueError, match="c_round"):
+        FusedRoundDriver(task, spec, be, c_round=0)
+    with pytest.raises(ValueError, match="c_round"):
+        FusedRoundDriver(task, spec, be, c_round=4)
+    with pytest.raises(ValueError, match="dropout"):
+        FusedRoundDriver(task, spec, be, dropout=1.0)
+    with pytest.raises(ValueError, match="use_llm"):
+        FusedRoundDriver(task, spec, be, use_llm=True)
+    # c_round == C collapses to full participation
+    assert FusedRoundDriver(task, spec, be, c_round=3).c_round is None
+
+
+# ---------------------------------------------------------------------------
+# the 'clients' mesh: population stacks sharded 8 ways
+# ---------------------------------------------------------------------------
+def _assert_sharded_pop_parity(one, shard, C):
+    """Keys and integers are position-pure → exact; float paths absorb
+    the mesh's per-shard reduction reordering (f32 ulps)."""
+    for field in ("cohort", "dropped", "selected", "n_evals"):
+        np.testing.assert_array_equal(getattr(one, field),
+                                      getattr(shard, field),
+                                      err_msg=field)
+    np.testing.assert_array_equal(one.cum_evals[:, :C],
+                                  shard.cum_evals[:, :C])
+    np.testing.assert_array_equal(one.budgets[:, :C],
+                                  shard.budgets[:, :C])
+    np.testing.assert_array_equal(np.isnan(one.losses),
+                                  np.isnan(shard.losses))
+    np.testing.assert_allclose(one.losses, shard.losses, atol=1e-5)
+    np.testing.assert_allclose(one.server_loss, shard.server_loss,
+                               atol=1e-5)
+    np.testing.assert_allclose(one.theta_g, shard.theta_g, atol=1e-5)
+
+
+@multi_device
+def test_population_sharded_parity():
+    """C_pop=12 padded to 16 over 8 devices, cohorts of 8: the sharded
+    fused scan equals the single-device one."""
+    kw = dict(backend="fake", dropout=0.25, c_round=8, n_rounds=3)
+    one, theta0 = _pop_driver(**kw)
+    shard, _ = _pop_driver(n_devices=8, **kw)
+    _assert_sharded_pop_parity(one.run(theta0), shard.run(theta0), 12)
+
+
+_CHILD = r"""
+import json
+import numpy as np
+import jax
+from repro.data.tasks import build_task
+from repro.core.fused_rounds import FusedRoundDriver
+from repro.quantum import backends as backend_mod
+from repro.quantum import qnn
+
+task = build_task("genomic", n_clients=12, train_size=96, test_size=32,
+                  val_size=32, seed=7)
+spec = qnn.QNNSpec("vqc", n_qubits=4, n_classes=task.n_classes)
+be = backend_mod.get("fake")
+theta0 = np.asarray(spec.init_params(jax.random.PRNGKey(11)), np.float64)
+kw = dict(optimizer="spsa", seed=4, maxiter0=3, n_rounds=3,
+          early_stop=False, c_round=8, dropout=0.25)
+one = FusedRoundDriver(task, spec, be, **kw).run(theta0)
+shard = FusedRoundDriver(task, spec, be, n_devices=8, **kw).run(theta0)
+C = task.n_clients
+eq = lambda f: bool(np.array_equal(getattr(one, f), getattr(shard, f)))
+print("RESULT:" + json.dumps({
+    "cohort_equal": eq("cohort"), "dropped_equal": eq("dropped"),
+    "sel_equal": eq("selected"), "nevals_equal": eq("n_evals"),
+    "cum_equal": bool(np.array_equal(one.cum_evals[:, :C],
+                                     shard.cum_evals[:, :C])),
+    "nan_equal": bool(np.array_equal(np.isnan(one.losses),
+                                     np.isnan(shard.losses))),
+    "dloss": float(np.nanmax(np.abs(one.losses - shard.losses))),
+    "dtheta": float(np.abs(one.theta_g - shard.theta_g).max()),
+}))
+"""
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) >= 8,
+    reason="a real mesh is visible — the in-process parity test above "
+           "covers this; don't pay the heavy child interpreter twice")
+def test_population_sharded_parity_forced_host_devices():
+    """Force 8 host devices in a fresh interpreter (XLA_FLAGS must be
+    set before jax initializes) and require the sharded population scan
+    to match the single-device one, keys and padding included."""
+    env = dict(os.environ)
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (flags
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT:")][-1]
+    got = json.loads(line[len("RESULT:"):])
+    for k in ("cohort_equal", "dropped_equal", "sel_equal",
+              "nevals_equal", "cum_equal", "nan_equal"):
+        assert got[k], got
+    assert got["dloss"] <= 1e-5, got
+    assert got["dtheta"] <= 1e-5, got
